@@ -1,0 +1,212 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline extraction for every (arch × shape) cell on the single-pod mesh.
+
+cost_analysis() counts while-loop (lax.scan) bodies ONCE (verified in
+DESIGN.md §7.1), so per-layer costs are measured from *unrolled shallow
+builds* and extrapolated:
+
+    total(X) = cost(profile_A) + Σ_seg (L_seg - A_seg) · (cost(B_seg) - cost(A))
+
+where profile A has depth 1 per segment and B_seg adds one layer to segment
+`seg` only. Unrolled builds also disable attention-KV chunking and MoE
+dispatch chunking so no FLOPs hide inside loops; microbatch accumulation
+unrolls as a Python loop (exact). memory/collective structure of the real
+deployable (scanned) build comes from experiments/dryrun/*.json.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI (single-link-per-collective-step assumption — conservative).
+
+    compute_term   = HLO_FLOPs_per_dev / 197e12
+    memory_term    = HLO_bytes_per_dev / 819e9
+    collective_term= collective_bytes_per_dev / 50e9
+
+Outputs experiments/roofline/<arch>_<shape>.json and a markdown table.
+"""
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT_DIR = ROOT / "experiments" / "roofline"
+DRYRUN_DIR = ROOT / "experiments" / "dryrun"
+
+
+def _cell_costs(cfg, shape, mesh, profile, collect=True):
+    """flops/bytes(/collective bytes) of one unrolled shallow build."""
+    import jax
+    from repro.launch.steps import build_cell
+    from repro.launch.dryrun import collective_bytes
+
+    lm, step, args, shs = build_cell(cfg, shape, mesh,
+                                     depth_profile=profile, unroll=True)
+    with mesh:
+        lowered = jax.jit(step, in_shardings=shs).lower(*args)
+        compiled = lowered.compile(
+            compiler_options={"xla_backend_optimization_level": "0"})
+    ca = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())["total"] if collect else 0.0
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)), float(coll))
+
+
+def _seg_counts(cfg):
+    from repro.models.lm import LM
+    return {s.name: s.count for s in LM(cfg).segments}
+
+
+def extrapolate(cfg, shape, mesh):
+    counts = _seg_counts(cfg)
+    segs = [k for k, v in counts.items() if v > 0]
+    base_prof = {k: 1 for k in segs}
+    base = _cell_costs(cfg, shape, mesh, base_prof)
+    total = np.array(base)
+    detail = {"base": base, "marginal": {}}
+    for s in segs:
+        prof = dict(base_prof)
+        prof[s] = 2
+        two = _cell_costs(cfg, shape, mesh, prof)
+        marg = np.array(two) - np.array(base)
+        detail["marginal"][s] = marg.tolist()
+        total = total + (counts[s] - 1) * marg
+    return total, detail, counts
+
+
+# ------------------------------------------------- analytic "useful" FLOPs
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D (+ causal attention term) — the MFU numerator."""
+    n_active = active_params(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "decode":
+        tokens = shape.global_batch  # one new token per sequence
+    fwd_only = shape.kind != "train"
+    mult = 2.0 if fwd_only else 6.0
+    flops = mult * n_active * tokens
+    # attention score/value matmuls (causal 1/2 for train/prefill)
+    attn_layers = _attn_layer_count(cfg)
+    dh_q = cfg.mla.nope_head_dim + cfg.mla.rope_head_dim if cfg.mla else cfg.dh
+    dh_v = cfg.mla.v_head_dim if cfg.mla else cfg.dh
+    per_tok_ctx = (shape.seq_len / 2.0 if shape.kind != "decode"
+                   else shape.seq_len)
+    attn = (2.0 if fwd_only else 6.0) * attn_layers * cfg.n_heads \
+        * (dh_q + dh_v) * per_tok_ctx * tokens
+    if cfg.family in ("ssm",):
+        attn = 0.0
+    if cfg.family == "hybrid":
+        n_attn_blocks = cfg.n_layers // cfg.attn_every
+        attn = (2.0 if fwd_only else 6.0) * n_attn_blocks * cfg.n_heads \
+            * 2 * cfg.dh * per_tok_ctx * tokens
+    if cfg.mtp_depth and shape.kind == "train":
+        flops *= 1.0 + cfg.mtp_depth / max(cfg.n_layers, 1)
+    return flops + attn
+
+
+def _attn_layer_count(cfg):
+    if cfg.family == "encdec":
+        return cfg.enc_layers + 2 * cfg.dec_layers  # self + cross
+    if cfg.family == "vlm":
+        return cfg.n_layers  # self layers + cross (approx: ctx differs)
+    if cfg.family in ("ssm",):
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    return cfg.n_layers
+
+
+def active_params(cfg) -> float:
+    n = cfg.param_count()
+    if cfg.moe is None:
+        return float(n)
+    mo = cfg.moe
+    d = cfg.d_model
+    routed_total = (cfg.n_layers - mo.first_dense_layers) \
+        * mo.num_experts * 3 * d * mo.d_expert
+    routed_active = (cfg.n_layers - mo.first_dense_layers) \
+        * mo.top_k * 3 * d * mo.d_expert
+    return float(n - routed_total + routed_active)
+
+
+def run_cell(arch: str, shape_name: str):
+    import jax
+    from repro.configs import SHAPES, applicable_shapes, get_config
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name not in applicable_shapes(cfg):
+        return {"arch": arch, "shape": shape_name, "status": "skipped"}
+    mesh = make_production_mesh(multi_pod=False)
+    n_chips = 256
+
+    (flops, byts, coll), detail, counts = extrapolate(cfg, shape, mesh)
+    # per-device: the compiled module is already the per-device program
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / n_chips
+    res = {
+        "arch": arch, "shape": shape_name, "mesh": "16x16", "status": "ok",
+        "hlo_flops_per_dev": flops, "hlo_bytes_per_dev": byts,
+        "collective_bytes_per_dev": coll,
+        **{k: round(v, 6) for k, v in terms.items()},
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": round(mf / max(flops, 1.0), 3),
+        "roofline_fraction": round(t_comp / max(t_comp, t_mem, t_coll), 3),
+        "seg_counts": counts,
+        "detail": detail,
+    }
+    # deploy-build memory from the dry-run record
+    dr = DRYRUN_DIR / f"{arch}_{shape_name}_16x16.json"
+    if dr.exists():
+        d = json.loads(dr.read_text())
+        if d.get("status") == "ok":
+            res["deploy_memory_gb"] = d["memory"]["peak_per_device_gb"]
+            res["deploy_collectives"] = d["collectives"]
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    args = ap.parse_args()
+    from repro.configs import ARCH_NAMES, SHAPES
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else ARCH_NAMES
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    rows = []
+    for a in archs:
+        for s in shapes:
+            try:
+                r = run_cell(a, s)
+            except Exception as e:  # noqa: BLE001
+                r = {"arch": a, "shape": s, "status": "error", "error": repr(e)}
+                print("FAIL", a, s, repr(e), flush=True)
+            (OUT_DIR / f"{a}_{s}.json".replace("/", "_")).write_text(
+                json.dumps(r, indent=1, default=float))
+            if r.get("status") == "ok":
+                print(f"{a:26s} {s:12s} comp {r['compute_s']*1e3:8.2f}ms "
+                      f"mem {r['memory_s']*1e3:8.2f}ms "
+                      f"coll {r['collective_s']*1e3:8.2f}ms "
+                      f"-> {r['bottleneck']:10s} "
+                      f"useful {r['useful_flops_ratio']:.2f} "
+                      f"roofline {r['roofline_fraction']:.2f}", flush=True)
+            rows.append(r)
+    print(f"\n{sum(1 for r in rows if r.get('status')=='ok')} ok, "
+          f"{sum(1 for r in rows if r.get('status')=='skipped')} skipped, "
+          f"{sum(1 for r in rows if r.get('status')=='error')} errors")
+
+
+if __name__ == "__main__":
+    main()

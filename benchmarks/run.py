@@ -1,0 +1,345 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+
+Paper mapping (DESIGN.md §6):
+  bench_grad_error            -> Fig 3   (relative mini-batch gradient error)
+  bench_convergence_speed     -> Tbl 2 / Fig 2 (steps & time to target acc)
+  bench_batch_size_robustness -> Tbl 3   (accuracy vs clusters per batch)
+  bench_ablation_compensation -> Fig 4 / Tbl 8-9 (C_f / C_b / β)
+  bench_time_per_epoch        -> App E.2 (per-epoch wall time by method)
+  bench_message_retention     -> Tbl 7   (% adjacency retained fwd/bwd)
+  bench_spider                -> App F   (variance-reduced estimator)
+  bench_spmm_kernel           -> kernel hot-spot micro-benchmark
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments" / "bench"
+
+
+def _timer(fn, iters=3):
+    fn()  # warmup/compile
+    t0 = time.time()
+    for _ in range(iters):
+        fn()
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def _setup(preset="ppi-cpu", hidden=64, layers=3, parts=16, seed=0):
+    import jax
+    from repro.core import from_graph
+    from repro.graph import make_sbm_dataset, partition_graph
+    from repro.models import make_gnn
+    g = make_sbm_dataset(preset, seed=3)
+    data = from_graph(g)
+    gnn = make_gnn("gcn", g.feature_dim, hidden, g.num_classes, layers)
+    params = gnn.init_params(jax.random.key(seed))
+    pts = partition_graph(g, parts, seed=0)
+    return g, data, gnn, params, pts
+
+
+# ------------------------------------------------------------------- Fig 3
+def bench_grad_error(fast=False):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (METHODS, backward_sgd_grads, exact_layer_values,
+                            full_grads, init_history, make_train_step,
+                            to_device_batch)
+    from repro.graph import ClusterSampler
+    g, data, gnn, params, parts = _setup()
+    hs, vs = exact_layer_values(gnn, params, data)
+    _, gfull = full_grads(gnn, params, data)
+
+    def rel(ga, gb):
+        f1, f2 = jax.tree.leaves(ga), jax.tree.leaves(gb)
+        num = sum(float(jnp.sum((a - b) ** 2)) for a, b in zip(f1, f2))
+        den = sum(float(jnp.sum(jnp.asarray(b) ** 2)) for b in f2)
+        return (num / max(den, 1e-12)) ** 0.5
+
+    rows = {}
+    for name in ("lmc", "gas", "cluster", "cf_only", "cb_only"):
+        m = METHODS[name]
+        s = ClusterSampler(g, 16, 2, parts=parts, seed=1,
+                           include_halo=m.include_halo,
+                           edge_weight_mode=m.edge_weight_mode,
+                           stochastic=False)
+        step = jax.jit(make_train_step(gnn, m, g.num_nodes))
+        store = init_history(gnn.num_layers, g.num_nodes, gnn.hidden_dim)
+        for _ in range(2 if fast else 4):
+            for sg in s.epoch():
+                _, _, store, _ = step(params, store, to_device_batch(sg),
+                                      data.x, data.self_w)
+        bias, err = [], []
+        t0 = time.time()
+        n = 0
+        for sg in s.epoch():
+            _, gm, store, _ = step(params, store, to_device_batch(sg),
+                                   data.x, data.self_w)
+            nodes = jnp.asarray(sg.batch_gids[sg.batch_mask > 0])
+            gsgd = backward_sgd_grads(gnn, params, data, hs, vs, nodes,
+                                      scale=8.0)
+            bias.append(rel(gm["layers"], gsgd))
+            err.append(rel(gm, gfull))
+            n += 1
+        us = (time.time() - t0) / n * 1e6
+        rows[name] = {"bias": float(np.mean(bias)),
+                      "full_err": float(np.mean(err))}
+        print(f"grad_error/{name},{us:.0f},bias={np.mean(bias):.4f};"
+              f"err_vs_full={np.mean(err):.4f}", flush=True)
+    assert rows["lmc"]["bias"] < rows["gas"]["bias"] < rows["cluster"]["bias"]
+    return rows
+
+
+# ----------------------------------------------------------- Tbl 2 / Fig 2
+def bench_convergence_speed(fast=False):
+    from repro.core import METHODS
+    from repro.graph import ClusterSampler
+    from repro.optim import sgd
+    from repro.train import GNNTrainer
+    g, data, gnn, params, parts = _setup(hidden=64, layers=2)
+    target = 0.60
+    steps_budget = 150 if fast else 400
+    rows = {}
+    for name in ("lmc", "gas", "cluster"):
+        m = METHODS[name]
+        steps, times = [], []
+        for seed in range(1 if fast else 3):
+            s = ClusterSampler(g, 16, 2, parts=parts, seed=seed,
+                               include_halo=m.include_halo,
+                               edge_weight_mode=m.edge_weight_mode)
+            tr = GNNTrainer(gnn, m, g, s, sgd(lr=0.3), seed=seed)
+            t0 = time.time()
+            steps_to_target = steps_budget
+            for _ in range(steps_budget // 25):
+                tr.run(25)
+                if float(tr.eval("val")) >= target:
+                    steps_to_target = tr.step_num
+                    break
+            steps.append(steps_to_target)
+            times.append(time.time() - t0)
+        rows[name] = float(np.mean(steps))
+        print(f"convergence/{name},{np.mean(times)*1e6:.0f},"
+              f"steps_to_{target}acc={np.mean(steps):.0f}", flush=True)
+    return rows
+
+
+# ------------------------------------------------------------------- Tbl 3
+def bench_batch_size_robustness(fast=False):
+    from repro.core import GAS, LMC
+    from repro.graph import ClusterSampler
+    from repro.optim import sgd
+    from repro.train import GNNTrainer
+    g, data, gnn, params, parts = _setup(hidden=64, layers=2)
+    rows = {}
+    for c in ([1, 4] if fast else [1, 2, 4]):
+        for m in (LMC, GAS):
+            s = ClusterSampler(g, 16, c, parts=parts, seed=0,
+                               include_halo=m.include_halo,
+                               edge_weight_mode=m.edge_weight_mode)
+            tr = GNNTrainer(gnn, m, g, s, sgd(lr=0.3), seed=0)
+            t0 = time.time()
+            tr.run(100 if fast else 200)
+            acc = float(tr.eval("test"))
+            rows[f"{m.name}_c{c}"] = acc
+            print(f"batch_robustness/{m.name}_c{c},"
+                  f"{(time.time()-t0)*1e6:.0f},test_acc={acc:.4f}", flush=True)
+    return rows
+
+
+# ----------------------------------------------------------- Fig 4 / Tbl 8
+def bench_ablation_compensation(fast=False):
+    from repro.core import METHODS
+    from repro.graph import ClusterSampler
+    from repro.optim import sgd
+    from repro.train import GNNTrainer
+    g, data, gnn, params, parts = _setup(hidden=64, layers=2)
+    rows = {}
+    for name in ("lmc", "cf_only", "cb_only", "gas"):
+        m = METHODS[name]
+        s = ClusterSampler(g, 16, 1, parts=parts, seed=0,  # small batch
+                           include_halo=m.include_halo,
+                           edge_weight_mode=m.edge_weight_mode)
+        tr = GNNTrainer(gnn, m, g, s, sgd(lr=0.3), seed=0)
+        t0 = time.time()
+        tr.run(100 if fast else 250)
+        acc = float(tr.eval("val"))
+        rows[name] = acc
+        print(f"ablation/{name},{(time.time()-t0)*1e6:.0f},"
+              f"val_acc={acc:.4f}", flush=True)
+    return rows
+
+
+# --------------------------------------------------------------- App E.2
+def bench_time_per_epoch(fast=False):
+    import jax
+    from repro.core import (METHODS, init_history, make_train_step,
+                            to_device_batch)
+    from repro.graph import ClusterSampler
+    g, data, gnn, params, parts = _setup()
+    rows = {}
+    for name in ("lmc", "gas", "cluster"):
+        m = METHODS[name]
+        s = ClusterSampler(g, 16, 2, parts=parts, seed=0,
+                           include_halo=m.include_halo,
+                           edge_weight_mode=m.edge_weight_mode)
+        step = jax.jit(make_train_step(gnn, m, g.num_nodes))
+        store = init_history(gnn.num_layers, g.num_nodes, gnn.hidden_dim)
+        batches = [to_device_batch(sg) for sg in s.epoch()]
+
+        def epoch():
+            nonlocal store
+            for b in batches:
+                _, _, store, _ = step(params, store, b, data.x, data.self_w)
+            jax.block_until_ready(store.h)
+
+        us = _timer(epoch, iters=2 if fast else 4)
+        rows[name] = us
+        print(f"time_per_epoch/{name},{us:.0f},epoch_s={us/1e6:.3f}",
+              flush=True)
+    return rows
+
+
+# ------------------------------------------------------------------- Tbl 7
+def bench_message_retention(fast=False):
+    """% of whole-graph messages retained in fwd/bwd per method (Tbl 7)."""
+    from repro.core import METHODS
+    from repro.graph import ClusterSampler
+    g, data, gnn, params, parts = _setup()
+    total = g.num_edges
+    for name in ("lmc", "gas", "cluster"):
+        m = METHODS[name]
+        s = ClusterSampler(g, 16, 2, parts=parts, seed=0,
+                           include_halo=m.include_halo,
+                           edge_weight_mode=m.edge_weight_mode,
+                           stochastic=False)
+        # paper Tbl 7: fraction of Ã entries participating at least once per
+        # epoch; GAS's backward only propagates adjoints along batch-internal
+        # edges, LMC compensates the rest (100% like full-batch GD)
+        fwd_edges, bwd_edges = set(), set()
+        t0 = time.time()
+        for sg in s.epoch():
+            gids = np.concatenate([sg.batch_gids, sg.halo_gids])
+            ne = sg.n_edges_real
+            su = gids[sg.edge_src[:ne]].astype(np.int64)
+            dv = gids[sg.edge_dst[:ne]].astype(np.int64)
+            code = su * g.num_nodes + dv
+            fwd_edges.update(code.tolist())
+            if name == "lmc":
+                bwd_edges.update(code.tolist())
+            else:
+                nb = sg.batch_gids.shape[0]
+                intra = (sg.edge_src[:ne] < nb) & (sg.edge_dst[:ne] < nb)
+                bwd_edges.update(code[intra].tolist())
+        us = (time.time() - t0) * 1e6
+        print(f"message_retention/{name},{us:.0f},"
+              f"fwd={len(fwd_edges)/total:.2%};bwd={len(bwd_edges)/total:.2%}",
+              flush=True)
+
+
+# --------------------------------------------------------------------- App F
+def bench_spider(fast=False):
+    """LMC-SPIDER: the anchored running estimate has lower error than the
+    plain per-batch estimate at equal small-batch cost (App. F)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (LMC, full_grads, init_history, make_train_step,
+                            to_device_batch)
+    from repro.graph import ClusterSampler
+    from repro.optim import make_spider_controller
+    g, data, gnn, params, parts = _setup(hidden=32, layers=2)
+    s = ClusterSampler(g, 16, 2, parts=parts, seed=0)
+    step = jax.jit(make_train_step(gnn, LMC, g.num_nodes))
+    store = init_history(gnn.num_layers, g.num_nodes, gnn.hidden_dim)
+    for _ in range(2):
+        for sg in s.epoch():
+            _, _, store, _ = step(params, store, to_device_batch(sg),
+                                  data.x, data.self_w)
+    _, gfull = full_grads(gnn, params, data)
+
+    def rel(ga):
+        f1, f2 = jax.tree.leaves(ga), jax.tree.leaves(gfull)
+        num = sum(float(jnp.sum((a - b) ** 2)) for a, b in zip(f1, f2))
+        den = sum(float(jnp.sum(jnp.asarray(b) ** 2)) for b in f2)
+        return (num / max(den, 1e-12)) ** 0.5
+
+    init, _, anchor, refine = make_spider_controller(q=4)
+    sa = ClusterSampler(g, 16, 8, parts=parts, seed=3)   # large anchor batch
+    t0 = time.time()
+    _, g_anchor, store, _ = step(params, store, to_device_batch(sa.sample()),
+                                 data.x, data.self_w)
+    st = anchor(init(params), params, g_anchor)
+    plain_errs, spider_errs = [], []
+    for _ in range(4 if fast else 8):
+        sg = s.sample()
+        _, g_small, store, _ = step(params, store, to_device_batch(sg),
+                                    data.x, data.self_w)
+        plain_errs.append(rel(g_small))
+        # fixed params: the SPIDER difference term cancels exactly, so the
+        # estimate stays anchored at the large-batch gradient
+        st = refine(st, params, g_small, g_small)
+        spider_errs.append(rel(st.g_est))
+    us = (time.time() - t0) * 1e6
+    print(f"spider,{us:.0f},plain_err={np.mean(plain_errs):.4f};"
+          f"spider_err={np.mean(spider_errs):.4f}", flush=True)
+    assert np.mean(spider_errs) < np.mean(plain_errs)
+
+
+# ----------------------------------------------------------------- kernels
+def bench_spmm_kernel(fast=False):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import build_ell, bucketed_spmm
+    from repro.kernels.ref import degree_bucket_spmm_ref
+    g, data, gnn, params, parts = _setup()
+    row = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
+    ws = g.gcn_edge_weights(g.indices.astype(np.int64), row)
+    ell = build_ell(g.indptr, g.indices, ws)
+    h = jnp.asarray(np.random.default_rng(0).normal(
+        size=(g.num_nodes, 128)).astype(np.float32))
+    ptr, ind, wj = (jnp.asarray(g.indptr), jnp.asarray(g.indices),
+                    jnp.asarray(ws))
+    ref = jax.jit(lambda h_: degree_bucket_spmm_ref(ptr, ind, wj, h_))
+    us_ref = _timer(lambda: jax.block_until_ready(ref(h)))
+    us_krn = _timer(lambda: jax.block_until_ready(bucketed_spmm(ell, h)),
+                    iters=1)
+    nnz = g.num_edges
+    print(f"spmm/jnp_segment_sum,{us_ref:.0f},"
+          f"gflops={2*nnz*128/us_ref/1e3:.2f}", flush=True)
+    print(f"spmm/pallas_interpret,{us_krn:.0f},"
+          f"note=interpret-mode;TPU-target-not-CPU-representative", flush=True)
+
+
+BENCHES = {
+    "grad_error": bench_grad_error,
+    "convergence_speed": bench_convergence_speed,
+    "batch_size_robustness": bench_batch_size_robustness,
+    "ablation_compensation": bench_ablation_compensation,
+    "time_per_epoch": bench_time_per_epoch,
+    "message_retention": bench_message_retention,
+    "spider": bench_spider,
+    "spmm_kernel": bench_spmm_kernel,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n](fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

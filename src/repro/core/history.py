@@ -1,0 +1,42 @@
+"""Historical value stores (H̄^l and V̄^l of Section 5).
+
+The stores are plain device arrays shaped ``(L, n, d)`` / ``(L-1, n, d)`` so
+they can be sharded along the node axis on a mesh (``P(None, "data", None)``)
+and threaded functionally (donated) through the train step. On the paper's
+GPU setup these lived in host RAM with async transfers; on a TPU pod they
+stay HBM-resident (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class HistoricalState(NamedTuple):
+    h: jax.Array  # (L, n, d)   historical embeddings  H̄^l, l = 1..L
+    v: jax.Array  # (L-1, n, d) historical aux vars    V̄^l, l = 1..L-1
+
+    @property
+    def num_layers(self) -> int:
+        return int(self.h.shape[0])
+
+
+def init_history(num_layers: int, num_nodes: int, hidden_dim: int,
+                 dtype=jnp.float32) -> HistoricalState:
+    return HistoricalState(
+        h=jnp.zeros((num_layers, num_nodes, hidden_dim), dtype),
+        v=jnp.zeros((max(num_layers - 1, 1), num_nodes, hidden_dim), dtype),
+    )
+
+
+def scatter_rows(buf: jax.Array, gids: jax.Array, mask: jax.Array,
+                 rows: jax.Array, n: int) -> jax.Array:
+    """buf[gids] <- rows where mask==1; padded rows are dropped (index -> n)."""
+    idx = jnp.where(mask > 0, gids, n).astype(jnp.int32)
+    return buf.at[idx].set(rows, mode="drop")
+
+
+def gather_rows(buf: jax.Array, gids: jax.Array) -> jax.Array:
+    return jnp.take(buf, gids, axis=0, mode="clip")

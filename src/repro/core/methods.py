@@ -1,0 +1,42 @@
+"""Mini-batch method space: LMC, GAS, Cluster-GCN and ablations as one config.
+
+The unified train step (core/lmc.py) is parameterized by how halo (1-hop
+out-of-batch) values are approximated in each direction:
+
+  forward  ĥ = (1-β)·H̄(historical) + β·h̃(incomplete fresh)     (Eq. 9)
+  backward V̂ = (1-β)·V̄(historical) + β·Ṽ(incomplete fresh)     (Eq. 12)
+
+=> LMC        : fwd 'lmc',        bwd 'lmc'
+   GAS        : fwd 'historical', bwd 'none'   (discard halo adjoints)
+   Cluster-GCN: sampler drops the halo entirely (include_halo=False)
+   C_f-only   : fwd 'lmc',        bwd 'none'   (Fig. 4 ablation)
+   C_b-only   : fwd 'historical', bwd 'lmc'
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MBMethod:
+    name: str
+    fwd_mode: str = "lmc"       # 'lmc' | 'historical' | 'fresh' | 'none'
+    bwd_mode: str = "lmc"       # 'lmc' | 'none' | 'fresh'
+    include_halo: bool = True   # sampler-level: False = Cluster-GCN view
+    edge_weight_mode: str = "global"  # 'global' (GAS/LMC) | 'local' (Cluster)
+
+    def validate(self) -> None:
+        assert self.fwd_mode in ("lmc", "historical", "fresh", "none")
+        assert self.bwd_mode in ("lmc", "none", "fresh")
+        if not self.include_halo:
+            assert self.fwd_mode == "none" and self.bwd_mode == "none"
+
+
+LMC = MBMethod("lmc", fwd_mode="lmc", bwd_mode="lmc")
+GAS = MBMethod("gas", fwd_mode="historical", bwd_mode="none")
+CLUSTER = MBMethod("cluster", fwd_mode="none", bwd_mode="none",
+                   include_halo=False, edge_weight_mode="local")
+CF_ONLY = MBMethod("cf_only", fwd_mode="lmc", bwd_mode="none")
+CB_ONLY = MBMethod("cb_only", fwd_mode="historical", bwd_mode="lmc")
+
+METHODS = {m.name: m for m in (LMC, GAS, CLUSTER, CF_ONLY, CB_ONLY)}

@@ -1,0 +1,4 @@
+from repro.data.tokens import TokenStream
+from repro.data.prefetch import Prefetcher
+
+__all__ = ["TokenStream", "Prefetcher"]

@@ -1,0 +1,39 @@
+"""Host-side prefetch: overlap batch construction with device compute."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+
+class Prefetcher:
+    """Background-thread prefetch with a bounded buffer (double buffering
+    by default). `close()` (or GC) stops the worker."""
+
+    def __init__(self, source: Iterator, depth: int = 2):
+        self.source = source
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        try:
+            for item in self.source:
+                if self._stop.is_set():
+                    return
+                self.q.put(item)
+        finally:
+            self.q.put(StopIteration)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is StopIteration:
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        self._stop.set()

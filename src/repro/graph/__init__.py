@@ -1,0 +1,11 @@
+"""Graph substrate: structures, partitioning, sampling, synthetic datasets."""
+from repro.graph.structure import Graph, PaddedSubgraph, build_subgraph
+from repro.graph.partition import partition_graph, edge_cut_fraction
+from repro.graph.sampler import ClusterSampler
+from repro.graph.synthetic import make_sbm_dataset, DATASET_PRESETS
+
+__all__ = [
+    "Graph", "PaddedSubgraph", "build_subgraph",
+    "partition_graph", "edge_cut_fraction",
+    "ClusterSampler", "make_sbm_dataset", "DATASET_PRESETS",
+]

@@ -1,0 +1,77 @@
+"""Cluster mini-batch sampler (Alg. 1 lines 2 & 4 + App. A.3.1 normalization).
+
+Partitions V into B clusters once (preprocessing), then per training step
+uniformly samples ``c`` clusters without replacement and emits the padded
+extended subgraph. Shapes are fixed per sampler instance so the jitted LMC
+step compiles once.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.graph.partition import partition_graph
+from repro.graph.structure import Graph, PaddedSubgraph, build_subgraph, padded_sizes_for
+
+
+class ClusterSampler:
+    def __init__(
+        self,
+        graph: Graph,
+        num_parts: int,
+        clusters_per_batch: int = 1,
+        *,
+        seed: int = 0,
+        include_halo: bool = True,
+        edge_weight_mode: str = "global",
+        beta_spec: tuple[str, float] = ("2x-x2", 1.0),
+        parts: Optional[np.ndarray] = None,
+        stochastic: bool = True,
+    ) -> None:
+        self.graph = graph
+        self.num_parts = int(num_parts)
+        self.c = int(clusters_per_batch)
+        self.include_halo = include_halo
+        self.edge_weight_mode = edge_weight_mode
+        self.beta_spec = beta_spec
+        self.stochastic = stochastic
+        self.rng = np.random.default_rng(seed)
+        self.parts = partition_graph(graph, num_parts, seed=seed) if parts is None else parts
+        self.degrees = graph.degrees()
+        self._nodes_of_part = [np.where(self.parts == p)[0] for p in range(self.num_parts)]
+        self.pad_batch, self.pad_halo, self.pad_edges = padded_sizes_for(
+            graph, self.parts, self.num_parts, self.c, include_halo)
+        self.batches_per_epoch = self.num_parts // self.c
+
+    # -- epoch iteration ----------------------------------------------------
+    def epoch(self) -> Iterator[PaddedSubgraph]:
+        """Yield B/c batches covering every cluster exactly once (stochastic
+        grouping per epoch, matching Cluster-GCN/LMC practice)."""
+        order = self.rng.permutation(self.num_parts) if self.stochastic \
+            else np.arange(self.num_parts)
+        for i in range(self.batches_per_epoch):
+            cluster_ids = order[i * self.c:(i + 1) * self.c]
+            yield self.build_batch(cluster_ids)
+
+    def sample(self) -> PaddedSubgraph:
+        """One uniformly sampled batch of c clusters (Alg. 1 line 4)."""
+        cluster_ids = self.rng.choice(self.num_parts, size=self.c, replace=False)
+        return self.build_batch(cluster_ids)
+
+    def build_batch(self, cluster_ids: np.ndarray) -> PaddedSubgraph:
+        nodes = np.concatenate([self._nodes_of_part[int(p)] for p in cluster_ids])
+        return build_subgraph(
+            self.graph, nodes,
+            pad_batch=self.pad_batch, pad_halo=self.pad_halo,
+            pad_edges=self.pad_edges, num_parts=self.num_parts,
+            clusters_in_batch=self.c, include_halo=self.include_halo,
+            edge_weight_mode=self.edge_weight_mode, beta_spec=self.beta_spec,
+            degrees=self.degrees)
+
+    # -- state for checkpoint/restore ----------------------------------------
+    def state_dict(self) -> dict:
+        return {"bit_generator": self.rng.bit_generator.state}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.rng.bit_generator.state = state["bit_generator"]

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  ell_spmm.py    — blocked-ELL SpMM (the GNN aggregation the paper's CUDA
+                   backend implements with scatter/gather); ref: ref.ell_spmm_ref
+  compensate.py  — fused gather + convex-combination for LMC Eq. (9)/(12)
+  ops.py         — jit wrappers: degree-bucketed production SpMM, AggregateFn
+  ref.py         — pure-jnp oracles
+
+Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling, 8x128
+aligned) and validated here in interpret mode (CPU container).
+"""
+from repro.kernels.ops import (ELLGraph, build_ell, bucketed_spmm, ell_spmm,
+                               lmc_compensate, ell_aggregate_fn)
+from repro.kernels import ref
+
+__all__ = ["ELLGraph", "build_ell", "bucketed_spmm", "ell_spmm",
+           "lmc_compensate", "ell_aggregate_fn", "ref"]

@@ -1,0 +1,55 @@
+"""Fused LMC compensation kernel — Eq. (9)/(12)'s gather + convex-combine.
+
+The per-halo-node update  ĥ_i = (1-β_i)·H̄[gid_i] + β_i·h̃_i  is a gather from
+the (node-sharded) historical store fused with the lerp and validity mask, so
+the historical row never round-trips through HBM twice. Tiles follow the same
+(rows × feature-block) layout as the SpMM kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _comp_kernel(gid_ref, beta_ref, mask_ref, fresh_ref, store_ref, o_ref):
+    bn, bd = o_ref.shape
+
+    def row_body(i, _):
+        g = gid_ref[i]
+        hist = pl.load(store_ref, (pl.dslice(g, 1), slice(None)))[0]
+        b = beta_ref[i]
+        out = mask_ref[i] * ((1.0 - b) * hist + b * fresh_ref[i, :])
+        pl.store(o_ref, (pl.dslice(i, 1), slice(None)), out[None])
+        return 0
+
+    jax.lax.fori_loop(0, bn, row_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_d",
+                                             "interpret"))
+def lmc_compensate(store: jax.Array, gids: jax.Array, beta: jax.Array,
+                   fresh: jax.Array, mask: jax.Array, *,
+                   block_rows: int = 256, block_d: int = 128,
+                   interpret: bool = True) -> jax.Array:
+    """store (M, D); gids/beta/mask (N,); fresh (N, D) -> (N, D)."""
+    n, d = fresh.shape
+    m = store.shape[0]
+    assert n % block_rows == 0 and d % block_d == 0, (n, d)
+    grid = (n // block_rows, d // block_d)
+    return pl.pallas_call(
+        _comp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda i, j: (i,)),
+            pl.BlockSpec((block_rows,), lambda i, j: (i,)),
+            pl.BlockSpec((block_rows,), lambda i, j: (i,)),
+            pl.BlockSpec((block_rows, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((m, block_d), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), fresh.dtype),
+        interpret=interpret,
+    )(gids, beta, mask, fresh, store)

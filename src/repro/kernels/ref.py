@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_spmm_ref(nbr_idx: jax.Array, nbr_w: jax.Array, h: jax.Array
+                 ) -> jax.Array:
+    """out[i] = Σ_k w[i,k] · h[idx[i,k]].   idx/w: (N, K); h: (M, D).
+
+    Padding entries carry w == 0 (idx may point anywhere valid).
+    """
+    gathered = h[nbr_idx]                      # (N, K, D)
+    return jnp.einsum("nk,nkd->nd", nbr_w, gathered)
+
+
+def lmc_compensate_ref(store: jax.Array, gids: jax.Array, beta: jax.Array,
+                       fresh: jax.Array, mask: jax.Array) -> jax.Array:
+    """ĥ = mask · [(1-β)·store[gid] + β·fresh]   (paper Eq. 9 / Eq. 12)."""
+    hist = store[gids]                         # (N, D)
+    return (mask[:, None] * ((1.0 - beta[:, None]) * hist
+                             + beta[:, None] * fresh))
+
+
+def degree_bucket_spmm_ref(indptr, indices, weights, h):
+    """CSR segment-sum oracle used by the bucketed production wrapper."""
+    n = indptr.shape[0] - 1
+    src = jnp.repeat(jnp.arange(n), jnp.diff(indptr),
+                     total_repeat_length=indices.shape[0])
+    msgs = h[indices] * weights[:, None]
+    return jax.ops.segment_sum(msgs, src, num_segments=n)

@@ -1,0 +1,170 @@
+"""Step builders + abstract input specs for every (arch × shape) cell.
+
+Used by the dry-run (ShapeDtypeStructs — no allocation), the trainer and the
+examples (real arrays). One code path builds both: `input_specs` returns
+(abstract_inputs, shardings) for the jit'd step of the given shape kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist.sharding import activation_sharding
+from repro.models.lm import LM
+from repro.models.spec import abstract, default_rules, shardings as spec_shardings
+from repro.optim.optimizers import Optimizer, make_optimizer
+
+
+def fsdp_axes_for(cfg: ArchConfig, mesh: Mesh) -> tuple:
+    axes = ("data",)
+    if cfg.fsdp_over_pod and "pod" in mesh.axis_names:
+        axes = ("pod", "data")
+    return axes
+
+
+def data_axes_in(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ------------------------------------------------------------------ steps
+def make_lm_train_step(lm: LM, opt: Optimizer) -> Callable:
+    """Full production step: loss -> grads (with optional microbatch
+    gradient accumulation) -> clipped optimizer update."""
+    n_mb = max(lm.cfg.microbatches, 1)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lm.train_loss)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if n_mb == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(n_mb, x.shape[0] // n_mb, *x.shape[1:]),
+                batch)
+
+            def body(acc, mb_batch):
+                loss_i, g_i = grads_of(params, mb_batch)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), acc[0], g_i), \
+                    acc[1] + loss_i
+                return acc, None
+
+            acc_dt = jnp.dtype(lm.cfg.grad_accum_dtype)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            if lm.unroll:
+                acc = (zeros, jnp.float32(0.0))
+                for i in range(n_mb):
+                    mbi = jax.tree.map(lambda x: x[i], mb)
+                    acc, _ = body(acc, mbi)
+            else:
+                acc, _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / n_mb, acc[0])
+            loss = acc[1] / n_mb
+        new_params, new_state, gnorm = opt.update(grads, opt_state, params,
+                                                  opt.lr)
+        return new_params, new_state, {"loss": loss, "grad_norm": gnorm}
+    return train_step
+
+
+def make_lm_prefill_step(lm: LM, max_seq: int) -> Callable:
+    def prefill_step(params, tokens, memory=None):
+        return lm.prefill(params, tokens, max_seq, memory)
+    return prefill_step
+
+
+def make_lm_decode_step(lm: LM) -> Callable:
+    def decode_step(params, caches, token, length):
+        return lm.decode_step(params, caches, token, length)
+    return decode_step
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ArchConfig, lm: LM, shape: ShapeConfig, mesh: Mesh,
+                opt: Optional[Optimizer] = None):
+    """(abstract_args, in_shardings) for the step of `shape.kind`."""
+    rules = default_rules(fsdp_axes_for(cfg, mesh))
+    pspec_tree = lm.params_spec()
+    params_abs = abstract(pspec_tree)
+    params_sh = spec_shardings(pspec_tree, rules, mesh)
+    dp = data_axes_in(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    B, S = shape.global_batch, shape.seq_len
+
+    def tok_sh(bdim_divisible: bool):
+        return NamedSharding(mesh, P(dp if bdim_divisible else None, None))
+
+    ndev_dp = int(np.prod([mesh.shape[a] for a in data_axes_in(mesh)]))
+    b_ok = B % max(ndev_dp, 1) == 0
+
+    if shape.kind == "train":
+        batch_abs: dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }
+        batch_sh: dict[str, Any] = {"tokens": tok_sh(b_ok),
+                                    "loss_mask": tok_sh(b_ok)}
+        if cfg.family in ("vlm", "encdec"):
+            T = cfg.frontend_tokens or S
+            batch_abs["memory"] = jax.ShapeDtypeStruct((B, T, cfg.d_model),
+                                                       jnp.bfloat16)
+            batch_sh["memory"] = NamedSharding(
+                mesh, P(dp if b_ok else None, None, None))
+        assert opt is not None
+        opt_abs = opt.abstract_state(pspec_tree)
+        opt_sh = spec_shardings(opt.state_spec(pspec_tree), rules, mesh)
+        args = (params_abs, opt_abs, batch_abs)
+        shs = (params_sh, opt_sh, batch_sh)
+        return args, shs
+
+    if shape.kind == "prefill":
+        args = [params_abs, jax.ShapeDtypeStruct((B, S), jnp.int32)]
+        shs = [params_sh, tok_sh(b_ok)]
+        if cfg.family in ("vlm", "encdec"):
+            T = cfg.frontend_tokens or S
+            args.append(jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.bfloat16))
+            shs.append(NamedSharding(mesh, P(dp if b_ok else None, None, None)))
+        return tuple(args), tuple(shs)
+
+    if shape.kind == "decode":
+        cache_spec = lm.cache_spec(B, S)
+        caches_abs = abstract(cache_spec)
+        caches_sh = spec_shardings(cache_spec, rules, mesh)
+        args = (params_abs, caches_abs,
+                jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+        shs = (params_sh, caches_sh, tok_sh(b_ok), NamedSharding(mesh, P()))
+        return args, shs
+
+    raise ValueError(shape.kind)
+
+
+def _with_act_sharding(fn, mesh):
+    def inner(*a, **kw):
+        with activation_sharding(mesh):
+            return fn(*a, **kw)
+    return inner
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
+               depth_profile=None, unroll: bool = False):
+    """(step_fn, abstract_args, in_shardings) for one dry-run cell."""
+    lm = LM(cfg, depth_profile=depth_profile, unroll=unroll)
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer)
+        step = make_lm_train_step(lm, opt)
+        args, shs = input_specs(cfg, lm, shape, mesh, opt)
+    elif shape.kind == "prefill":
+        step = make_lm_prefill_step(lm, shape.seq_len)
+        args, shs = input_specs(cfg, lm, shape, mesh)
+    else:
+        step = make_lm_decode_step(lm)
+        args, shs = input_specs(cfg, lm, shape, mesh)
+    return lm, _with_act_sharding(step, mesh), args, shs

@@ -1,0 +1,4 @@
+"""Model definitions: GNNs (the paper's subject) and the assigned LM zoo."""
+from repro.models.gnn import GNN, make_gnn
+
+__all__ = ["GNN", "make_gnn"]

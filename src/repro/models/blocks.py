@@ -1,0 +1,482 @@
+"""Per-family transformer blocks: param specs + apply fns (train & decode).
+
+Each block family provides:
+  <family>_spec(cfg)                      -> PSpec tree (one layer)
+  <family>_apply(p, h, ctx)               -> h'      (full-sequence: train/prefill)
+  <family>_decode(p, h, cache, ctx)       -> h', cache'
+  <family>_cache_spec(cfg, B, S)          -> PSpec tree of the per-layer cache
+
+Caches store the *sequence* axis with logical name "cache_seq" so the dry-run
+shards it over the `model` axis (sequence-sharded decode attention — see
+DESIGN.md §7.5); MLA caches stay compressed (rank 512+64).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import dp_axis_size, shard_act, shard_res
+from repro.models.layers import (attention, decode_attention, rms_norm, rope,
+                                 swiglu, BF16)
+from repro.models.spec import PSpec
+
+
+class Ctx(NamedTuple):
+    """Non-param inputs threaded through blocks."""
+    positions: jax.Array            # (B, S) absolute positions
+    length: jax.Array               # scalar: valid cache length (decode)
+    memory: jax.Array | None = None  # encoder output / image embeddings
+
+
+# =============================================================== dense GQA attn
+def attn_spec(cfg: ArchConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    spec = {
+        "ln": PSpec((d,), ("embed",), init="ones"),
+        "wq": PSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": PSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": PSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": PSpec((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = PSpec((h, dh), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = PSpec((kv, dh), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = PSpec((kv, dh), ("kv_heads", "head_dim"), init="zeros")
+    return spec
+
+
+def _qkv(p: dict, x: jax.Array, cfg: ArchConfig):
+    q = jnp.einsum("bsd,dhq->bshq", x, p["wq"])
+    k = jnp.einsum("bsd,dhq->bshq", x, p["wk"])
+    v = jnp.einsum("bsd,dhq->bshq", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = shard_act(q, "dp", None, "model", None)
+    k = shard_act(k, "dp", None, "model", None)
+    v = shard_act(v, "dp", None, "model", None)
+    return q, k, v
+
+
+def attn_apply(p: dict, h: jax.Array, ctx: Ctx, cfg: ArchConfig,
+               *, causal: bool = True) -> jax.Array:
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    q, k, v = _qkv(p, x, cfg)
+    q = rope(q, ctx.positions, cfg.rope_theta)
+    k = rope(k, ctx.positions, cfg.rope_theta)
+    chunk = cfg.attn_chunk if h.shape[1] > 2 * cfg.attn_chunk else 0
+    o = attention(q, k, v, causal=causal, kv_chunk=chunk)
+    o = shard_act(o, "dp", None, "model", None)
+    out = h + jnp.einsum("bshq,hqd->bsd", o, p["wo"]).astype(h.dtype)
+    return shard_res(out)
+
+
+def attn_cache_spec(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+    kv, dh = cfg.n_kv_heads, cfg.dh
+    sh = (batch, max_seq, kv, dh)
+    lg = ("batch", "cache_seq", "kv_heads", "head_dim")
+    return {"k": PSpec(sh, lg, init="zeros"), "v": PSpec(sh, lg, init="zeros")}
+
+
+def attn_prefill_cache(p: dict, h: jax.Array, ctx: Ctx, cfg: ArchConfig,
+                       max_seq: int):
+    """Full-seq forward that also returns the populated KV cache."""
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    q, k, v = _qkv(p, x, cfg)
+    q = rope(q, ctx.positions, cfg.rope_theta)
+    k = rope(k, ctx.positions, cfg.rope_theta)
+    chunk = cfg.attn_chunk if h.shape[1] > 2 * cfg.attn_chunk else 0
+    o = attention(q, k, v, causal=True, kv_chunk=chunk)
+    o = shard_act(o, "dp", None, "model", None)
+    out = h + jnp.einsum("bshq,hqd->bsd", o, p["wo"]).astype(h.dtype)
+    out = shard_res(out)
+    pad = max_seq - k.shape[1]
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, {"k": k.astype(BF16), "v": v.astype(BF16)}
+
+
+def attn_decode(p: dict, h: jax.Array, cache: dict, ctx: Ctx, cfg: ArchConfig):
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    q, k, v = _qkv(p, x, cfg)
+    pos = ctx.length[None, None] * jnp.ones(h.shape[:2], jnp.int32)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, ctx.length, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, ctx.length, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, ctx.length + 1)
+    out = h + jnp.einsum("bshq,hqd->bsd", o, p["wo"]).astype(h.dtype)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ============================================================ cross attention
+def cross_attn_spec(cfg: ArchConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    return {
+        "ln": PSpec((d,), ("embed",), init="ones"),
+        "wq": PSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": PSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": PSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": PSpec((h, dh, d), ("heads", "head_dim", "embed")),
+        "gate": PSpec((1,), (None,), init="zeros"),
+    }
+
+
+def cross_attn_apply(p: dict, h: jax.Array, ctx: Ctx, cfg: ArchConfig) -> jax.Array:
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    mem = ctx.memory
+    q = jnp.einsum("bsd,dhq->bshq", x, p["wq"])
+    k = jnp.einsum("bsd,dhq->bshq", mem, p["wk"])
+    v = jnp.einsum("bsd,dhq->bshq", mem, p["wv"])
+    o = attention(q, k, v, causal=False)
+    g = jnp.tanh(p["gate"].astype(jnp.float32)).astype(h.dtype)
+    return h + g * jnp.einsum("bshq,hqd->bsd", o, p["wo"]).astype(h.dtype)
+
+
+# ==================================================================== MLA attn
+def mla_spec(cfg: ArchConfig) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qdim = m.nope_head_dim + m.rope_head_dim
+    spec = {
+        "ln": PSpec((d,), ("embed",), init="ones"),
+        "w_dkv": PSpec((d, m.kv_lora_rank + m.rope_head_dim), ("embed", "kv_lora")),
+        "kv_ln": PSpec((m.kv_lora_rank,), (None,), init="ones"),
+        "w_uk": PSpec((m.kv_lora_rank, H, m.nope_head_dim),
+                      ("kv_lora", "heads", "head_dim")),
+        "w_uv": PSpec((m.kv_lora_rank, H, m.v_head_dim),
+                      ("kv_lora", "heads", "head_dim")),
+        "wo": PSpec((H, m.v_head_dim, d), ("heads", "head_dim", "embed")),
+    }
+    if m.q_lora_rank:
+        spec["w_dq"] = PSpec((d, m.q_lora_rank), ("embed", "q_lora"))
+        spec["q_ln"] = PSpec((m.q_lora_rank,), (None,), init="ones")
+        spec["w_uq"] = PSpec((m.q_lora_rank, H, qdim), ("q_lora", "heads", "head_dim"))
+    else:
+        spec["w_q"] = PSpec((d, H, qdim), ("embed", "heads", "head_dim"))
+    return spec
+
+
+def _mla_qkv(p: dict, x: jax.Array, ctx: Ctx, cfg: ArchConfig, positions):
+    m = cfg.mla
+    H = cfg.n_heads
+    if "w_dq" in p:
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_ln"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhq->bshq", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhq->bshq", x, p["w_q"])
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv = rms_norm(ckv_full[..., :m.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_rope = rope(ckv_full[..., None, m.kv_lora_rank:], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope[:, :, 0]
+
+
+def mla_apply(p: dict, h: jax.Array, ctx: Ctx, cfg: ArchConfig) -> jax.Array:
+    """Full-sequence MLA (decompressed K/V — training/prefill path)."""
+    m = cfg.mla
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, ctx, cfg, ctx.positions)
+    k_nope = shard_act(jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"]),
+                       "dp", None, "model", None)
+    v = shard_act(jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"]),
+                  "dp", None, "model", None)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (*k_rope.shape[:2], cfg.n_heads, m.rope_head_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = 1.0 / np.sqrt(m.nope_head_dim + m.rope_head_dim)
+    q = shard_act(q, "dp", None, "model", None)
+    chunk = cfg.attn_chunk if h.shape[1] > 2 * cfg.attn_chunk else 0
+    o = attention(q, k, v, causal=True, kv_chunk=chunk, softmax_scale=scale)
+    o = shard_act(o, "dp", None, "model", None)
+    out = h + jnp.einsum("bshk,hkd->bsd", o, p["wo"]).astype(h.dtype)
+    return shard_res(out)
+
+
+def mla_cache_spec(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": PSpec((batch, max_seq, m.kv_lora_rank),
+                      ("batch", "cache_seq", None), init="zeros"),
+        "k_rope": PSpec((batch, max_seq, m.rope_head_dim),
+                        ("batch", "cache_seq", None), init="zeros"),
+    }
+
+
+def mla_prefill_cache(p: dict, h: jax.Array, ctx: Ctx, cfg: ArchConfig,
+                      max_seq: int):
+    m = cfg.mla
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    _, _, c_kv, k_rope = _mla_qkv(p, x, ctx, cfg, ctx.positions)
+    out = mla_apply(p, h, ctx, cfg)
+    pad = max_seq - c_kv.shape[1]
+    if pad:
+        c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    return out, {"c_kv": c_kv.astype(BF16), "k_rope": k_rope.astype(BF16)}
+
+
+def mla_decode(p: dict, h: jax.Array, cache: dict, ctx: Ctx, cfg: ArchConfig):
+    """Absorbed MLA decode: attention in the compressed rank-r space."""
+    m = cfg.mla
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    pos = ctx.length[None, None] * jnp.ones(h.shape[:2], jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(p, x, ctx, cfg, pos)
+    c_cache = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, ctx.length, 0))
+    r_cache = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+        (0, ctx.length, 0))
+    # absorb W_uk into q: q_eff (B,H,r)
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    scale = 1.0 / np.sqrt(m.nope_head_dim + m.rope_head_dim)
+    logits = (jnp.einsum("bshr,btr->bhst", q_eff, c_cache,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_rope, r_cache,
+                           preferred_element_type=jnp.float32)) * scale
+    t = c_cache.shape[1]
+    posi = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
+    logits = jnp.where((posi < ctx.length + 1)[None, None, None], logits, -1e30)
+    pattn = jax.nn.softmax(logits, axis=-1)
+    o_c = jnp.einsum("bhst,btr->bshr", pattn.astype(c_cache.dtype), c_cache)
+    o = jnp.einsum("bshr,rhk->bshk", o_c, p["w_uv"])
+    out = h + jnp.einsum("bshk,hkd->bsd", o, p["wo"]).astype(h.dtype)
+    return out, {"c_kv": c_cache, "k_rope": r_cache}
+
+
+# ------------------------------------------------ gather-mirrored MoE VJPs
+# The VJP of a gather is a scatter, which GSPMD resolves by replicating the
+# operand and all-reducing (observed: ~7 GB/layer of f32 collectives on
+# deepseek-v2-lite). Dispatch/combine are index bijections (plus drops), so
+# each backward is itself a gather — these custom VJPs keep the whole MoE
+# data path scatter-free (EXPERIMENTS.md §Perf iteration 3).
+
+@jax.custom_vjp
+def _dispatch_gather(xpad, slot_tok, e_c, pos_c, inv_order):
+    """(G,s+1,d) rows -> (G,E,C,d) expert slots (slot_tok sentinel = s)."""
+    G = xpad.shape[0]
+    gidx = jnp.arange(G, dtype=jnp.int32)[:, None, None]
+    return xpad[gidx, slot_tok]
+
+
+def _dispatch_gather_fwd(xpad, slot_tok, e_c, pos_c, inv_order):
+    out = _dispatch_gather(xpad, slot_tok, e_c, pos_c, inv_order)
+    return out, (e_c, pos_c, inv_order, xpad.shape[1] - 1)
+
+
+def _dispatch_gather_bwd(res, d_ebuf):
+    e_c, pos_c, inv_order, s = res
+    G, E, C, dd = d_ebuf.shape
+    sk = e_c.shape[1]
+    k = sk // s
+    dpad = jnp.pad(d_ebuf, ((0, 0), (0, 1), (0, 1), (0, 0)))
+    gidx = jnp.arange(G, dtype=jnp.int32)[:, None]
+    d_rows = shard_act(dpad[gidx, e_c, pos_c], "dp", None, None)   # (G,sk,d)
+    d_unsrt = jnp.take_along_axis(d_rows, inv_order[..., None], axis=1)
+    d_x = d_unsrt.reshape(G, s, k, dd).sum(axis=2)
+    d_xpad = jnp.pad(d_x, ((0, 0), (0, 1), (0, 0)))
+    return (d_xpad, None, None, None, None)
+
+
+_dispatch_gather.defvjp(_dispatch_gather_fwd, _dispatch_gather_bwd)
+
+
+@jax.custom_vjp
+def _combine_gather(ypad, e_c, pos_c, slot_asn):
+    """(G,E+1,C+1,d) expert outputs -> (G,sk,d) per-assignment rows."""
+    gidx = jnp.arange(ypad.shape[0], dtype=jnp.int32)[:, None]
+    return ypad[gidx, e_c, pos_c]
+
+
+def _combine_gather_fwd(ypad, e_c, pos_c, slot_asn):
+    return _combine_gather(ypad, e_c, pos_c, slot_asn), (slot_asn,)
+
+
+def _combine_gather_bwd(res, d_rows):
+    (slot_asn,) = res
+    G, sk, dd = d_rows.shape
+    dpad = jnp.pad(d_rows, ((0, 0), (0, 1), (0, 0)))   # row sk = zeros
+    gidx = jnp.arange(G, dtype=jnp.int32)[:, None, None]
+    d_ypad = shard_act(dpad[gidx, slot_asn], "dp", None, None, None)
+    return (d_ypad, None, None, None)
+
+
+_combine_gather.defvjp(_combine_gather_fwd, _combine_gather_bwd)
+
+
+@jax.custom_vjp
+def _permute(x, idx, inv_idx):
+    """take_along_axis over a permutation; backward is the inverse gather."""
+    return jnp.take_along_axis(x, idx[..., None], axis=1)
+
+
+def _permute_fwd(x, idx, inv_idx):
+    return _permute(x, idx, inv_idx), (inv_idx,)
+
+
+def _permute_bwd(res, d):
+    (inv_idx,) = res
+    return (jnp.take_along_axis(d, inv_idx[..., None], axis=1), None, None)
+
+
+_permute.defvjp(_permute_fwd, _permute_bwd)
+
+
+# ===================================================================== MLPs
+def mlp_spec(cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    return {
+        "ln": PSpec((d,), ("embed",), init="ones"),
+        "w_gate": PSpec((d, f), ("embed", "mlp")),
+        "w_up": PSpec((d, f), ("embed", "mlp")),
+        "w_down": PSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p: dict, h: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = rms_norm(h, p["ln"], cfg.norm_eps)
+    out = h + swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    return shard_res(out)
+
+
+def moe_spec(cfg: ArchConfig) -> dict:
+    mo = cfg.moe
+    d, E, fe = cfg.d_model, mo.num_experts, mo.d_expert
+    spec = {
+        "ln": PSpec((d,), ("embed",), init="ones"),
+        "router": PSpec((d, E), ("embed", None), dtype=jnp.float32),
+        # f (not d) carries the FSDP shard: the gate/up expert einsums then
+        # contract an unsharded d against (E: model, f: data)-sharded weights
+        # with NO per-microbatch weight all-gathers; only the (E,G,C,d)
+        # output needs a reduce-scatter (§Perf iteration 4)
+        "we_gate": PSpec((E, d, fe), ("experts", None, "moe_mlp")),
+        "we_up": PSpec((E, d, fe), ("experts", None, "moe_mlp")),
+        "we_down": PSpec((E, fe, d), ("experts", "moe_mlp", None)),
+    }
+    if mo.num_shared:
+        fs = mo.d_expert * mo.num_shared
+        spec["ws_gate"] = PSpec((d, fs), ("embed", "mlp"))
+        spec["ws_up"] = PSpec((d, fs), ("embed", "mlp"))
+        spec["ws_down"] = PSpec((fs, d), ("mlp", "embed"))
+    return spec
+
+
+def moe_apply(p: dict, h: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Group-wise sort-based dropping dispatch (expert parallelism).
+
+    Tokens stay grouped by batch row (groups shard over the data axes); each
+    group sorts its (S·k) assignments locally, scatters into a per-group
+    (E, C, d) buffer, and a single transpose to the (E: model, G: data)
+    layout is the EP all-to-all. No (T,E,C) one-hot dispatch einsum — HLO
+    FLOPs stay ≈ real expert FLOPs (DESIGN.md §7.4). Groups are processed in
+    `dispatch_chunks` sequential chunks to cap the dispatch working set
+    (and pipeline the EP exchange against expert compute).
+    """
+    mo = cfg.moe
+    b, s, d = h.shape
+    E, k = mo.num_experts, mo.top_k
+    # SP -> full-sequence boundary: one explicit all-gather of the S axis
+    # here; all dispatch arithmetic below then stays local to its data shard
+    # (EXPERIMENTS.md §Perf iteration 2)
+    x = shard_act(rms_norm(h, p["ln"], cfg.norm_eps), "dp", None, None)
+
+    cap = int(np.ceil(s * k * mo.capacity_factor / E / 4.0)) * 4
+    cap = max(cap, min(k, s * k))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                        # (b,s,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    def group_dispatch(xg, eg, gg):
+        """xg (G,s,d), eg (G,s,k), gg (G,s,k) -> MoE output (G,s,d).
+
+        Gather-only data movement: the only scatter is the int32 slot map
+        (G,E+1,C+1); token rows move via batched gathers and the combine is
+        an inverse-permutation gather + reshape-sum — shapes GSPMD partitions
+        cleanly on the group (data) and expert (model) dims.
+        """
+        G = xg.shape[0]
+        sk = s * k
+        e_flat = eg.reshape(G, sk)
+        g_flat = gg.reshape(G, sk)
+        tok_flat = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None]
+        tok_flat = jnp.broadcast_to(tok_flat, (G, sk))
+        order = jnp.argsort(e_flat, axis=-1)
+        inv_order = jnp.argsort(order, axis=-1)
+        e_srt = jnp.take_along_axis(e_flat, order, -1)
+        t_srt = jnp.take_along_axis(tok_flat, order, -1)
+        # position within expert, per group
+        onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)      # (G,sk,E)
+        counts = onehot.sum(axis=1)                              # (G,E)
+        starts = jnp.cumsum(counts, axis=-1) - counts
+        pos = (jnp.arange(sk, dtype=jnp.int32)[None]
+               - jnp.take_along_axis(starts, e_srt, -1))
+        keep = pos < cap
+        pos_c = jnp.where(keep, pos, cap).astype(jnp.int32)
+        e_c = jnp.where(keep, e_srt, E).astype(jnp.int32)
+
+        gidx = jnp.arange(G, dtype=jnp.int32)[:, None]
+        slot_tok = jnp.full((G, E + 1, cap + 1), s, jnp.int32)
+        slot_tok = slot_tok.at[gidx, e_c, pos_c].set(t_srt)      # int-only scatter
+        slot_asn = jnp.full((G, E + 1, cap + 1), sk, jnp.int32)
+        slot_asn = slot_asn.at[gidx, e_c, pos_c].set(
+            jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32)[None], (G, sk)))
+        xpad = jnp.pad(xg, ((0, 0), (0, 1), (0, 0)))             # row s = zeros
+        # gather stays LOCAL to each data shard (G batched); only the compact
+        # (E,G,C,d) buffer crosses the mesh (§Perf iterations 1-3)
+        ebuf = shard_act(
+            _dispatch_gather(xpad, slot_tok[:, :E, :cap], e_c, pos_c,
+                             inv_order), "dp", None, None, None)  # (G,E,C,d)
+        # EP exchange in two cheap steps: slice E per model rank (local — the
+        # buffer is model-replicated), then a sharding-preserving transpose
+        ebuf = shard_act(ebuf, "dp", "model", None, None)
+        ebuf = shard_act(jnp.swapaxes(ebuf, 0, 1), "model", "dp", None, None)
+        gg_ = jnp.einsum("egcd,edf->egcf", ebuf, p["we_gate"])
+        uu = jnp.einsum("egcd,edf->egcf", ebuf, p["we_up"])
+        yy = jnp.einsum("egcf,efd->egcd", jax.nn.silu(gg_) * uu, p["we_down"])
+        yb = shard_act(jnp.swapaxes(yy, 0, 1), "dp", None, None, None)
+        ypad = jnp.pad(yb, ((0, 0), (0, 1), (0, 1), (0, 0)))     # (G,E+1,C+1,d)
+        y_srt = shard_act(_combine_gather(ypad, e_c, pos_c, slot_asn),
+                          "dp", None, None)
+        g_srt = jnp.take_along_axis(g_flat, order, -1)
+        y_srt = y_srt * (g_srt * keep)[..., None].astype(yy.dtype)
+        y_unsrt = shard_act(_permute(y_srt, inv_order, order), "dp", None, None)
+        return y_unsrt.reshape(G, s, k, d).sum(axis=2)
+
+    # keep >= one group per data shard in every chunk (else GSPMD replicates)
+    nchunk = max(1, min(mo.dispatch_chunks, b // max(dp_axis_size(), 1)))
+    while b % nchunk:
+        nchunk -= 1
+    if nchunk > 1:
+        # chunk dim is sequential (lax.map); groups stay data-sharded
+        xr = shard_act(x.reshape(nchunk, b // nchunk, s, d),
+                       None, "dp", None, None)
+        er = shard_act(eidx.reshape(nchunk, b // nchunk, s, k),
+                       None, "dp", None, None)
+        gr = shard_act(gates.reshape(nchunk, b // nchunk, s, k),
+                       None, "dp", None, None)
+        # remat the chunk body: its dispatch buffers are recomputed in the
+        # backward instead of being stacked across chunks by scan autodiff
+        out = jax.lax.map(jax.checkpoint(lambda a: group_dispatch(*a)),
+                          (xr, er, gr))
+        out = out.reshape(b, s, d)
+    else:
+        out = group_dispatch(x, eidx, gates)
+
+    out = shard_act(out, "dp", None, None)
+    if mo.num_shared:
+        out = out + swiglu(x, p["ws_gate"], p["ws_up"], p["ws_down"])
+    return shard_res(h + out.astype(h.dtype))

@@ -1,0 +1,201 @@
+"""LM layer primitives: norms, RoPE, chunked (flash-style) attention, GQA,
+decode attention over (possibly sequence-sharded) KV caches.
+
+TPU-native conventions (DESIGN.md §7):
+  * no S×S mask constants — iota comparisons only;
+  * chunked attention bounds activation memory without a custom kernel;
+  * attention logits are explicitly sharded: by heads when the head count
+    divides the model axis, else by query position (sequence parallel) — this
+    keeps the flash accumulators O(1/n_model) per device for every assigned
+    arch, including 40/56-head models that a 16-way TP axis cannot split.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import model_axis_size, shard_act
+
+BF16 = jnp.bfloat16
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (n * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attn_labels(h: int, sq: int):
+    """Pick the shardable dim for (B, H, Sq, T) attention intermediates."""
+    msz = model_axis_size()
+    if msz > 1 and h % msz == 0:
+        return ("dp", "model", None, None)
+    if msz > 1 and sq % msz == 0:
+        return ("dp", None, "model", None)
+    return ("dp", None, None, None)
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+              q_offset: int | jax.Array = 0, kv_chunk: int = 0,
+              softmax_scale: Optional[float] = None) -> jax.Array:
+    """GQA attention. q (B,Sq,H,dh); k,v (B,T,KV,dhk/dhv). Returns (B,Sq,H,dhv).
+
+    kv_chunk > 0 runs a flash-style streaming softmax over KV chunks (lax.scan)
+    so no (Sq, T) tensor larger than (Sq, kv_chunk) is materialized.
+    """
+    b, sq, h, dh = q.shape
+    t, n_kv = k.shape[1], k.shape[2]
+    dhv = v.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(dh)
+    k = _repeat_kv(k, h // n_kv)
+    v = _repeat_kv(v, h // n_kv)
+    qs = (q * scale).astype(q.dtype)
+    q_pos = q_offset + jax.lax.broadcasted_iota(jnp.int32, (sq,), 0)
+    lbl = _attn_labels(h, sq)
+
+    if not kv_chunk or kv_chunk >= t:
+        logits = shard_act(jnp.einsum("bshd,bthd->bhst", qs, k,
+                                      preferred_element_type=jnp.float32), *lbl)
+        if causal:
+            k_pos = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v)
+        return out
+
+    nchunks = t // kv_chunk
+    k_c = k.reshape(b, nchunks, kv_chunk, h, dh)
+    v_c = v.reshape(b, nchunks, kv_chunk, h, dhv)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kc, vc, ci = inputs
+        logits = shard_act(jnp.einsum("bshd,bthd->bhst", qs, kc,
+                                      preferred_element_type=jnp.float32), *lbl)
+        if causal:
+            k_pos = ci * kv_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, (kv_chunk,), 0)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p.astype(vc.dtype), vc).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = shard_act(jnp.full((b, h, sq), NEG_INF, jnp.float32), *lbl[:3])
+    l0 = shard_act(jnp.zeros((b, h, sq), jnp.float32), *lbl[:3])
+    a0 = shard_act(jnp.zeros((b, h, sq, dhv), jnp.float32), *lbl)
+    # remat the chunk body: backward recomputes per-chunk logits instead of
+    # storing the full (Sq, T) matrix stacked over chunks (flash-attn bwd).
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0),
+        (k_c.swapaxes(0, 1), v_c.swapaxes(0, 1),
+         jnp.arange(nchunks, dtype=jnp.int32)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.swapaxes(1, 2).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array, *,
+                     softmax_scale: Optional[float] = None) -> jax.Array:
+    """Single-position attention over a KV cache.
+
+    q (B,1,H,dh); caches (B,T,KV,dh*); ``length`` = number of valid positions.
+    Works with the cache sequence axis sharded (sums/softmax over T become
+    cross-shard collectives under GSPMD).
+    """
+    b, _, h, dh = q.shape
+    t, n_kv = k_cache.shape[1], k_cache.shape[2]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(dh)
+    qg = q.reshape(b, n_kv, h // n_kv, dh) * scale                # (B,KV,G,dh)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
+    logits = jnp.where((pos < length)[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, v_cache.shape[-1])
+
+
+@jax.custom_vjp
+def embed_lookup(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Embedding gather with a *sharded, bf16* scatter-add backward.
+
+    The default `take` VJP scatter-adds into a full f32 (vocab, d) buffer that
+    GSPMD replicates per device and all-reduces (3.76 GiB f32 per copy for the
+    671B config). This custom VJP keeps the cotangent in the embedding dtype
+    and pins the (vocab: model, d: data) sharding on the scatter."""
+    return jnp.take(embed, tokens, axis=0)
+
+
+def _embed_fwd(embed, tokens):
+    # `embed` in the residuals is an alias of the parameter (no extra memory);
+    # only its shape/dtype are used in the backward.
+    return embed_lookup(embed, tokens), (tokens, embed)
+
+
+def _embed_bwd(res, dh):
+    tokens, embed = res
+    flat_ids = tokens.reshape(-1)
+    dh_flat = dh.reshape(-1, dh.shape[-1]).astype(embed.dtype)
+    z = shard_act(jnp.zeros_like(embed), "model", "dp")
+    demb = shard_act(z.at[flat_ids].add(dh_flat), "model", "dp")
+    return demb, None
+
+
+embed_lookup.defvjp(_embed_fwd, _embed_bwd)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    act = jax.nn.silu(g) * u
+    if act.ndim == 3:
+        act = shard_act(act, "dp", None, "model")
+    return jnp.einsum("...f,fd->...d", act, w_down).astype(x.dtype)
+
+
+def softmax_cross_entropy(logits: jax.Array, targets: jax.Array,
+                          mask: jax.Array, vocab_valid: int) -> jax.Array:
+    """Mean NLL over masked targets; padded vocab columns are excluded.
+
+    Written gather-free (logsumexp + masked select) so a vocab-sharded logits
+    tensor never has to be all-gathered.
+    """
+    logits = logits.astype(jnp.float32)
+    col = jax.lax.broadcasted_iota(jnp.int32, (logits.shape[-1],), 0)
+    ndim_pad = (None,) * (logits.ndim - 1)
+    logits = jnp.where(col[ndim_pad] < vocab_valid, logits, NEG_INF)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    lab = jnp.sum(jnp.where(col[ndim_pad] == targets[..., None], logits, 0.0),
+                  axis=-1)
+    ll = lab - lse
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

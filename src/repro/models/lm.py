@@ -1,0 +1,562 @@
+"""LM assembly: configs -> (param specs, train/prefill/decode fns).
+
+A model is a list of **segments**; each segment is `count` repeats of a block
+pattern whose per-layer params are stacked on a leading axis and executed with
+`lax.scan` (compile-time O(1) in depth — mandatory for 100-layer archs on this
+container's single-core XLA). Two build knobs exist purely for the roofline
+harness (EXPERIMENTS.md §Roofline):
+
+  depth_profile: {segment_name: count}  — shrink depth per segment, so per-layer
+      marginal FLOPs/bytes can be measured exactly from compiled artifacts
+      (cost_analysis does NOT multiply scan-body costs by trip count — verified);
+  unroll=True — Python-loop the segments (and disable attention KV-chunking)
+      in those cost-extraction builds so nothing hides inside a while-loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist.sharding import shard_act, shard_res
+from repro.models import blocks as B
+from repro.models import ssm as S
+from repro.models.blocks import Ctx
+from repro.models.layers import (softmax_cross_entropy, rms_norm,
+                                 embed_lookup, BF16)
+from repro.models.spec import PSpec, abstract, materialize
+
+VOCAB_ALIGN = 2048
+
+
+def _pad_vocab(v: int) -> int:
+    return ((v + VOCAB_ALIGN - 1) // VOCAB_ALIGN) * VOCAB_ALIGN
+
+
+def _stack(spec_tree, count: int):
+    return jax.tree.map(
+        lambda s: PSpec((count,) + s.shape, ("layers",) + s.logical,
+                        init=s.init, scale=s.scale, dtype=s.dtype),
+        spec_tree, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    name: str
+    kind: str
+    count: int
+    layer_spec: dict      # one layer's PSpec tree (unstacked)
+    inner: int = 1        # inner python-loop repeats inside one scanned step
+
+
+class LM:
+    """A built language model: specs + pure apply fns for one ArchConfig."""
+
+    def __init__(self, cfg: ArchConfig, *,
+                 depth_profile: Optional[dict[str, int]] = None,
+                 unroll: bool = False):
+        self.cfg = cfg
+        self.unroll = unroll
+        self.vpad = _pad_vocab(cfg.vocab)
+        self.segments = self._plan_segments(cfg, depth_profile or {})
+        if unroll:
+            # cost-extraction build: nothing may hide inside a while loop
+            kw = {"attn_chunk": 1 << 30}
+            if cfg.moe is not None:
+                kw["moe"] = dataclasses.replace(cfg.moe, dispatch_chunks=1)
+            self.cfg = dataclasses.replace(cfg, **kw)
+
+    # ------------------------------------------------------------ planning
+    @staticmethod
+    def _plan_segments(cfg: ArchConfig, prof: dict[str, int]) -> list[Segment]:
+        segs: list[Segment] = []
+
+        def n(name, default):
+            return max(int(prof.get(name, default)), 0)
+
+        if cfg.family == "dense":
+            segs.append(Segment("blocks", "dense", n("blocks", cfg.n_layers),
+                                {"attn": B.attn_spec(cfg), "mlp": B.mlp_spec(cfg)}))
+        elif cfg.family == "moe":
+            fd = cfg.moe.first_dense_layers
+            attn_spec = B.mla_spec(cfg) if cfg.mla else B.attn_spec(cfg)
+            if fd:
+                segs.append(Segment(
+                    "dense_blocks", "moe_dense", n("dense_blocks", fd),
+                    {"attn": dict(attn_spec),
+                     "mlp": B.mlp_spec(cfg, cfg.moe.d_ff_dense)}))
+            segs.append(Segment(
+                "moe_blocks", "moe", n("moe_blocks", cfg.n_layers - fd),
+                {"attn": dict(attn_spec), "moe": B.moe_spec(cfg)}))
+        elif cfg.family == "ssm":
+            segs.append(Segment("blocks", "rwkv", n("blocks", cfg.n_layers),
+                                S.rwkv6_spec(cfg)))
+        elif cfg.family == "hybrid":
+            groups, tail = divmod(cfg.n_layers, cfg.attn_every)
+            segs.append(Segment(
+                "groups", "mamba_group", n("groups", groups),
+                {"mamba": _stack(S.mamba2_spec(cfg), cfg.attn_every)},
+                inner=cfg.attn_every))
+            if tail:
+                segs.append(Segment("tail", "mamba", n("tail", tail),
+                                    S.mamba2_spec(cfg)))
+        elif cfg.family == "vlm":
+            g = cfg.cross_every
+            n_cross = cfg.n_layers // g
+            segs.append(Segment(
+                "groups", "vlm_group", n("groups", n_cross),
+                {"self": _stack({"attn": B.attn_spec(cfg),
+                                 "mlp": B.mlp_spec(cfg)}, g - 1),
+                 "cross": {"attn": B.cross_attn_spec(cfg),
+                           "mlp": B.mlp_spec(cfg)}},
+                inner=g - 1))
+        elif cfg.family == "encdec":
+            segs.append(Segment("encoder", "enc", n("encoder", cfg.enc_layers),
+                                {"attn": B.attn_spec(cfg), "mlp": B.mlp_spec(cfg)}))
+            segs.append(Segment(
+                "decoder", "dec", n("decoder", cfg.dec_layers),
+                {"attn": B.attn_spec(cfg), "cross": B.cross_attn_spec(cfg),
+                 "mlp": B.mlp_spec(cfg)}))
+        else:
+            raise ValueError(cfg.family)
+        return segs
+
+    # -------------------------------------------------------------- params
+    def params_spec(self) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        spec: dict[str, Any] = {
+            "embed": PSpec((self.vpad, d), ("vocab", "embed"), scale=0.01),
+            "final_ln": PSpec((d,), ("embed",), init="ones"),
+        }
+        if not cfg.tie_embeddings:
+            spec["head"] = PSpec((d, self.vpad), ("embed", "vocab"), scale=0.01)
+        for seg in self.segments:
+            spec[seg.name] = _stack(seg.layer_spec, seg.count)
+        if cfg.shared_attn:
+            spec["shared_attn"] = {"attn": B.attn_spec(cfg),
+                                   "mlp": B.mlp_spec(cfg)}
+        if cfg.mtp_depth:
+            spec["mtp"] = {"proj": PSpec((2 * d, d), (None, "embed")),
+                           "ln": PSpec((d,), ("embed",), init="ones"),
+                           "attn": (B.mla_spec(cfg) if cfg.mla
+                                    else B.attn_spec(cfg)),
+                           "mlp": B.mlp_spec(cfg, cfg.d_ff or 4 * d)}
+        return spec
+
+    def init_params(self, rng: jax.Array) -> dict:
+        return materialize(self.params_spec(), rng)
+
+    def abstract_params(self) -> dict:
+        return abstract(self.params_spec())
+
+    # ------------------------------------------------------------ helpers
+    def _remat(self, fn):
+        if self.cfg.remat == "none" or self.unroll:
+            return fn
+        if self.cfg.remat == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.checkpoint_dots)
+        return jax.checkpoint(fn)
+
+    def _run_seg(self, body, h, xs_tree, count):
+        """scan (or python-loop when unrolling) body over stacked params."""
+        if self.unroll:
+            for i in range(count):
+                x_i = jax.tree.map(lambda a: a[i], xs_tree)
+                h, _ = body(h, x_i)
+            return h
+        h, _ = jax.lax.scan(self._remat(body), h, xs_tree)
+        return h
+
+    def _block_body(self, seg: Segment, params: dict, ctx: Ctx):
+        cfg = self.cfg
+        kind = seg.kind
+
+        def dense(h, lp):
+            h = B.attn_apply(lp["attn"], h, ctx, cfg)
+            return B.mlp_apply(lp["mlp"], h, cfg), None
+
+        def moe_dense(h, lp):
+            h = (B.mla_apply if cfg.mla else B.attn_apply)(lp["attn"], h, ctx, cfg)
+            return B.mlp_apply(lp["mlp"], h, cfg), None
+
+        def moe(h, lp):
+            h = (B.mla_apply if cfg.mla else B.attn_apply)(lp["attn"], h, ctx, cfg)
+            return B.moe_apply(lp["moe"], h, cfg), None
+
+        def rwkv(h, lp):
+            h, _, _, _ = S.rwkv6_apply(lp, h, cfg)
+            return h, None
+
+        def mamba(h, lp):
+            return S.mamba2_apply(lp, h, cfg), None
+
+        def mamba_group(h, lp):
+            for i in range(seg.inner):
+                mp = jax.tree.map(lambda a: a[i], lp["mamba"])
+                h = S.mamba2_apply(mp, h, cfg)
+            sp = params["shared_attn"]
+            h = B.attn_apply(sp["attn"], h, ctx, cfg)
+            h = B.mlp_apply(sp["mlp"], h, cfg)
+            return h, None
+
+        def vlm_group(h, lp):
+            for i in range(seg.inner):
+                sl = jax.tree.map(lambda a: a[i], lp["self"])
+                h = B.attn_apply(sl["attn"], h, ctx, cfg)
+                h = B.mlp_apply(sl["mlp"], h, cfg)
+            h = B.cross_attn_apply(lp["cross"]["attn"], h, ctx, cfg)
+            h = B.mlp_apply(lp["cross"]["mlp"], h, cfg)
+            return h, None
+
+        def enc(h, lp):
+            h = B.attn_apply(lp["attn"], h, ctx, cfg, causal=False)
+            return B.mlp_apply(lp["mlp"], h, cfg), None
+
+        def dec(h, lp):
+            h = B.attn_apply(lp["attn"], h, ctx, cfg)
+            h = B.cross_attn_apply(lp["cross"], h, ctx, cfg)
+            return B.mlp_apply(lp["mlp"], h, cfg), None
+
+        return {"dense": dense, "moe_dense": moe_dense, "moe": moe,
+                "rwkv": rwkv, "mamba": mamba, "mamba_group": mamba_group,
+                "vlm_group": vlm_group, "enc": enc, "dec": dec}[kind]
+
+    # ------------------------------------------------------- forward (train)
+    def _backbone(self, params: dict, h: jax.Array, ctx: Ctx,
+                  seg_filter=None) -> jax.Array:
+        for seg in self.segments:
+            if seg_filter and seg.name not in seg_filter:
+                continue
+            if seg.count == 0:
+                continue
+            body = self._block_body(seg, params, ctx)
+            h = self._run_seg(body, h, params[seg.name], seg.count)
+        return h
+
+    def _logits(self, params: dict, h: jax.Array) -> jax.Array:
+        h = rms_norm(h, params["final_ln"], self.cfg.norm_eps)
+        w = params["embed"].T if self.cfg.tie_embeddings else params["head"]
+        # vocab stays model-sharded: the head/embed gradient contraction then
+        # produces (d, vpad/n_model) partials instead of full (d, vpad) f32
+        # buffers per device (EXPERIMENTS.md §Dry-run, 671B case study)
+        h = shard_act(h, "dp", None, None)
+        return shard_act(jnp.einsum("bsd,dv->bsv", h, w), "dp", None, "model")
+
+    def train_loss(self, params: dict, batch: dict) -> jax.Array:
+        """batch: tokens (B,S) int32, loss_mask (B,S) f32 [, memory (B,T,d)]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        bsz, seq = tokens.shape
+        pos = jax.lax.broadcasted_iota(jnp.int32, (bsz, seq), 1)
+        ctx = Ctx(positions=pos, length=jnp.int32(0),
+                  memory=batch.get("memory"))
+        h = shard_res(embed_lookup(params["embed"], tokens))
+
+        if cfg.family == "encdec":
+            src = batch["memory"]
+            src_pos = jax.lax.broadcasted_iota(
+                jnp.int32, (src.shape[0], src.shape[1]), 1)
+            mem = self._backbone(params, src, ctx._replace(positions=src_pos),
+                                 seg_filter={"encoder"})
+            ctx = ctx._replace(memory=mem)
+            h = self._backbone(params, h, ctx, seg_filter={"decoder"})
+        else:
+            h = self._backbone(params, h, ctx)
+
+        logits = self._logits(params, h)
+        targets = jnp.roll(tokens, -1, axis=1)
+        mask = batch["loss_mask"].at[:, -1].set(0.0)
+        loss = softmax_cross_entropy(logits, targets, mask, cfg.vocab)
+
+        if cfg.mtp_depth:
+            # DeepSeek-V3 multi-token prediction: predict t+2 from (h_t, e_{t+1})
+            mp = params["mtp"]
+            nxt = embed_lookup(params["embed"], targets)
+            h2 = jnp.einsum("bsd,de->bse",
+                            jnp.concatenate([h, nxt], axis=-1), mp["proj"])
+            h2 = rms_norm(h2, mp["ln"], cfg.norm_eps)
+            h2 = (B.mla_apply if cfg.mla else B.attn_apply)(mp["attn"], h2, ctx, cfg)
+            h2 = B.mlp_apply(mp["mlp"], h2, cfg)
+            logits2 = self._logits(params, h2)
+            t2 = jnp.roll(tokens, -2, axis=1)
+            mask2 = mask.at[:, -2:].set(0.0)
+            loss = loss + 0.3 * softmax_cross_entropy(logits2, t2, mask2, cfg.vocab)
+        return loss
+
+    # --------------------------------------------------------- serve: caches
+    def cache_spec(self, batch: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        out: dict[str, Any] = {}
+        for seg in self.segments:
+            if seg.kind in ("dense", "moe_dense", "moe"):
+                per = (B.mla_cache_spec(cfg, batch, max_seq) if cfg.mla
+                       else B.attn_cache_spec(cfg, batch, max_seq))
+                out[seg.name] = _stack(per, seg.count)
+            elif seg.kind == "rwkv":
+                out[seg.name] = _stack(S.rwkv6_cache_spec(cfg, batch), seg.count)
+            elif seg.kind == "mamba":
+                out[seg.name] = _stack(S.mamba2_cache_spec(cfg, batch), seg.count)
+            elif seg.kind == "mamba_group":
+                out[seg.name] = {
+                    "mamba": _stack(_stack(S.mamba2_cache_spec(cfg, batch),
+                                           seg.inner), seg.count),
+                    "attn": _stack(B.attn_cache_spec(cfg, batch, max_seq),
+                                   seg.count)}
+            elif seg.kind == "vlm_group":
+                out[seg.name] = {
+                    "self": _stack(_stack(
+                        B.attn_cache_spec(cfg, batch, max_seq), seg.inner),
+                        seg.count),
+                    "cross": _stack(B.attn_cache_spec(cfg, batch,
+                                                      cfg.frontend_tokens),
+                                    seg.count)}
+            elif seg.kind == "dec":
+                out[seg.name] = {
+                    "self": _stack(B.attn_cache_spec(cfg, batch, max_seq),
+                                   seg.count),
+                    "cross": _stack(B.attn_cache_spec(
+                        cfg, batch, self._src_len(max_seq)), seg.count)}
+            elif seg.kind == "enc":
+                pass  # encoder output is carried in ctx.memory, not a cache
+        return out
+
+    @staticmethod
+    def _src_len(max_seq: int) -> int:
+        return max_seq
+
+    def abstract_cache(self, batch: int, max_seq: int) -> dict:
+        return abstract(self.cache_spec(batch, max_seq))
+
+    # ---------------------------------------------------------- serve: decode
+    def decode_step(self, params: dict, caches: dict, token: jax.Array,
+                    length: jax.Array, memory: jax.Array | None = None):
+        """One token for the whole batch. token (B,1) -> logits (B, vpad)."""
+        cfg = self.cfg
+        h = jnp.take(params["embed"], token, axis=0)
+        ctx = Ctx(positions=None, length=length, memory=memory)
+        new_caches: dict[str, Any] = {}
+        for seg in self.segments:
+            if seg.count == 0 or seg.kind == "enc":
+                continue
+            h, new_caches[seg.name] = self._decode_seg(
+                seg, params, h, caches[seg.name], ctx)
+        logits = self._logits(params, h)[:, 0]
+        return logits, new_caches
+
+    def _decode_seg(self, seg: Segment, params: dict, h: jax.Array,
+                    cache, ctx: Ctx):
+        cfg = self.cfg
+
+        def run(body):
+            if not self.unroll:
+                h2, ys = jax.lax.scan(lambda c, xs: body(c, *xs), h,
+                                      (params[seg.name], cache))
+                return h2, ys
+            hh, ys = h, []
+            for i in range(seg.count):
+                lp = jax.tree.map(lambda a: a[i], params[seg.name])
+                lc = jax.tree.map(lambda a: a[i], cache)
+                hh, y = body(hh, lp, lc)
+                ys.append(y)
+            ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+            return hh, ys
+
+        if seg.kind in ("dense", "moe_dense", "moe"):
+            attn_dec = B.mla_decode if cfg.mla else B.attn_decode
+
+            def body(hh, lp, lc):
+                hh, nc = attn_dec(lp["attn"], hh, lc, ctx, cfg)
+                if seg.kind == "moe":
+                    hh = B.moe_apply(lp["moe"], hh, cfg)
+                else:
+                    hh = B.mlp_apply(lp["mlp"], hh, cfg)
+                return hh, nc
+            return run(body)
+
+        if seg.kind == "rwkv":
+            def body(hh, lp, lc):
+                hh, nc = S.rwkv6_decode(lp, hh, lc, cfg)
+                return hh, nc
+            return run(body)
+
+        if seg.kind == "mamba":
+            def body(hh, lp, lc):
+                hh, nc = S.mamba2_decode(lp, hh, lc, cfg)
+                return hh, nc
+            return run(body)
+
+        if seg.kind == "mamba_group":
+            sp = params["shared_attn"]
+
+            def body(hh, lp, lc):
+                new_m = []
+                for i in range(seg.inner):
+                    mp = jax.tree.map(lambda a: a[i], lp["mamba"])
+                    mc = jax.tree.map(lambda a: a[i], lc["mamba"])
+                    hh, nm = S.mamba2_decode(mp, hh, mc, cfg)
+                    new_m.append(nm)
+                new_m = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
+                hh, na = B.attn_decode(sp["attn"], hh, lc["attn"], ctx, cfg)
+                hh = B.mlp_apply(sp["mlp"], hh, cfg)
+                return hh, {"mamba": new_m, "attn": na}
+            return run(body)
+
+        if seg.kind == "vlm_group":
+            def body(hh, lp, lc):
+                new_s = []
+                for i in range(seg.inner):
+                    sl = jax.tree.map(lambda a: a[i], lp["self"])
+                    sc = jax.tree.map(lambda a: a[i], lc["self"])
+                    hh, ns = B.attn_decode(sl["attn"], hh, sc, ctx, cfg)
+                    hh = B.mlp_apply(sl["mlp"], hh, cfg)
+                    new_s.append(ns)
+                new_s = jax.tree.map(lambda *a: jnp.stack(a), *new_s)
+                hh, nx = self._cross_decode(lp["cross"]["attn"], hh,
+                                            lc["cross"], ctx)
+                hh = B.mlp_apply(lp["cross"]["mlp"], hh, cfg)
+                return hh, {"self": new_s, "cross": nx}
+            return run(body)
+
+        if seg.kind == "dec":
+            def body(hh, lp, lc):
+                hh, ns = B.attn_decode(lp["attn"], hh, lc["self"], ctx, cfg)
+                hh, nx = self._cross_decode(lp["cross"], hh, lc["cross"], ctx)
+                hh = B.mlp_apply(lp["mlp"], hh, cfg)
+                return hh, {"self": ns, "cross": nx}
+            return run(body)
+
+        raise ValueError(seg.kind)
+
+    def _cross_decode(self, p: dict, h: jax.Array, cache: dict, ctx: Ctx):
+        """Cross-attention against a prefilled (encoder/image) KV cache."""
+        cfg = self.cfg
+        from repro.models.layers import decode_attention
+        x = rms_norm(h, p["ln"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhq->bshq", x, p["wq"])
+        o = decode_attention(q, cache["k"], cache["v"],
+                             jnp.int32(cache["k"].shape[1]))
+        g = jnp.tanh(p["gate"].astype(jnp.float32)).astype(h.dtype) \
+            if "gate" in p else 1.0
+        return h + g * jnp.einsum("bshq,hqd->bsd", o, p["wo"]).astype(h.dtype), cache
+
+    # --------------------------------------------------------- serve: prefill
+    def prefill(self, params: dict, tokens: jax.Array, max_seq: int,
+                memory: jax.Array | None = None):
+        """Process a full prompt, returning (last-position logits, caches)."""
+        cfg = self.cfg
+        bsz, seq = tokens.shape
+        pos = jax.lax.broadcasted_iota(jnp.int32, (bsz, seq), 1)
+        ctx = Ctx(positions=pos, length=jnp.int32(0), memory=memory)
+        h = shard_res(embed_lookup(params["embed"], tokens))
+        caches: dict[str, Any] = {}
+
+        if cfg.family == "encdec":
+            src_pos = jax.lax.broadcasted_iota(
+                jnp.int32, (memory.shape[0], memory.shape[1]), 1)
+            mem = self._backbone(params, memory, ctx._replace(positions=src_pos),
+                                 seg_filter={"encoder"})
+            ctx = ctx._replace(memory=mem)
+
+        for seg in self.segments:
+            if seg.count == 0 or seg.kind == "enc":
+                continue
+            h, caches[seg.name] = self._prefill_seg(seg, params, h, ctx, max_seq)
+        logits = self._logits(params, h[:, -1:])[:, 0]
+        return logits, caches
+
+    def _prefill_seg(self, seg: Segment, params: dict, h: jax.Array, ctx: Ctx,
+                     max_seq: int):
+        cfg = self.cfg
+
+        def run(body):
+            if not self.unroll:
+                return jax.lax.scan(self._remat(body), h, params[seg.name])
+            hh, ys = h, []
+            for i in range(seg.count):
+                lp = jax.tree.map(lambda a: a[i], params[seg.name])
+                hh, y = body(hh, lp)
+                ys.append(y)
+            ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+            return hh, ys
+
+        if seg.kind in ("dense", "moe_dense", "moe"):
+            pre = B.mla_prefill_cache if cfg.mla else B.attn_prefill_cache
+
+            def body(hh, lp):
+                hh, c = pre(lp["attn"], hh, ctx, cfg, max_seq)
+                if seg.kind == "moe":
+                    hh = B.moe_apply(lp["moe"], hh, cfg)
+                else:
+                    hh = B.mlp_apply(lp["mlp"], hh, cfg)
+                return hh, c
+            return run(body)
+
+        if seg.kind == "rwkv":
+            def body(hh, lp):
+                hh, st, l1, l2 = S.rwkv6_apply(lp, hh, cfg)
+                return hh, {"state": st, "last1": l1, "last2": l2}
+            return run(body)
+
+        if seg.kind == "mamba":
+            def body(hh, lp):
+                return S.mamba2_apply(lp, hh, cfg, return_cache=True)
+            return run(body)
+
+        if seg.kind == "mamba_group":
+            sp = params["shared_attn"]
+
+            def body(hh, lp):
+                caches_m = []
+                for i in range(seg.inner):
+                    mp = jax.tree.map(lambda a: a[i], lp["mamba"])
+                    hh, cm_i = S.mamba2_apply(mp, hh, cfg, return_cache=True)
+                    caches_m.append(cm_i)
+                cm = jax.tree.map(lambda *a: jnp.stack(a), *caches_m)
+                hh, ca = B.attn_prefill_cache(sp["attn"], hh, ctx, cfg, max_seq)
+                hh = B.mlp_apply(sp["mlp"], hh, cfg)
+                return hh, {"mamba": cm, "attn": ca}
+            return run(body)
+
+        if seg.kind == "vlm_group":
+            def body(hh, lp):
+                cs = []
+                for i in range(seg.inner):
+                    sl = jax.tree.map(lambda a: a[i], lp["self"])
+                    hh, c = B.attn_prefill_cache(sl["attn"], hh, ctx, cfg, max_seq)
+                    hh = B.mlp_apply(sl["mlp"], hh, cfg)
+                    cs.append(c)
+                cs = jax.tree.map(lambda *a: jnp.stack(a), *cs)
+                hh, cx = self._cross_prefill(lp["cross"]["attn"], hh, ctx)
+                hh = B.mlp_apply(lp["cross"]["mlp"], hh, cfg)
+                return hh, {"self": cs, "cross": cx}
+            return run(body)
+
+        if seg.kind == "dec":
+            def body(hh, lp):
+                hh, cself = B.attn_prefill_cache(lp["attn"], hh, ctx, cfg, max_seq)
+                hh, cx = self._cross_prefill(lp["cross"], hh, ctx)
+                hh = B.mlp_apply(lp["mlp"], hh, cfg)
+                return hh, {"self": cself, "cross": cx}
+            return run(body)
+
+        raise ValueError(seg.kind)
+
+    def _cross_prefill(self, p: dict, h: jax.Array, ctx: Ctx):
+        cfg = self.cfg
+        mem = ctx.memory
+        x = rms_norm(h, p["ln"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhq->bshq", x, p["wq"])
+        k = jnp.einsum("bsd,dhq->bshq", mem, p["wk"])
+        v = jnp.einsum("bsd,dhq->bshq", mem, p["wv"])
+        from repro.models.layers import attention
+        o = attention(q, k, v, causal=False)
+        g = jnp.tanh(p["gate"].astype(jnp.float32)).astype(h.dtype) \
+            if "gate" in p else 1.0
+        out = h + g * jnp.einsum("bshq,hqd->bsd", o, p["wo"]).astype(h.dtype)
+        return out, {"k": k.astype(BF16), "v": v.astype(BF16)}

@@ -1,0 +1,103 @@
+"""Parameter spec trees: shapes + logical axes, materializable or abstract.
+
+Every LM block declares its parameters as a tree of :class:`PSpec` leaves
+(shape + logical axis names + init style). The same tree then produces
+  * real arrays            (``materialize`` — smoke tests, examples)
+  * ShapeDtypeStructs      (``abstract`` — the dry-run, no allocation)
+  * NamedShardings         (``shardings`` — via logical->mesh axis rules)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: tuple
+    logical: tuple            # logical axis name (or None) per dim
+    init: str = "normal"      # normal | zeros | ones
+    scale: float = 0.02
+    dtype: jnp.dtype = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def materialize(tree, rng: jax.Array):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, s.dtype))
+        else:
+            out.append((jax.random.normal(k, s.shape, jnp.float32)
+                        * s.scale).astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(tree):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree,
+                        is_leaf=_is_spec)
+
+
+# logical axis -> mesh axes. `fsdp` resolves to ("data",) or ("pod","data").
+def default_rules(fsdp_axes=("data",)) -> dict:
+    return {
+        "embed": fsdp_axes,       # weight-sharding (ZeRO/FSDP) dimension
+        "embed2": ("model",),
+        "batch": ("pod", "data"),      # activations / caches
+        "cache_seq": ("model",),       # sequence-sharded decode KV caches
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),   # dropped when not divisible
+        "mlp": ("model",),
+        "experts": ("model",),
+        "moe_mlp": ("data",),
+        "kv_lora": ("model",),
+        "q_lora": None,
+        "head_dim": None,
+        "state": None,
+        "conv": None,
+        "layers": None,
+        "dconv": None,
+        None: None,
+    }
+
+
+def partition_spec(spec: PSpec, rules: dict, mesh: Mesh) -> P:
+    axes_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    out = []
+    for dim, logical in zip(spec.shape, spec.logical):
+        ax = rules.get(logical)
+        if ax is None:
+            out.append(None)
+            continue
+        ax = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                   if a in axes_sizes and a not in used)
+        total = int(np.prod([axes_sizes[a] for a in ax])) if ax else 1
+        if not ax or dim % total != 0:
+            out.append(None)
+            continue
+        used.update(ax)
+        out.append(ax if len(ax) > 1 else ax[0])
+    return P(*out)
+
+
+def shardings(tree, rules: dict, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, partition_spec(s, rules, mesh)),
+        tree, is_leaf=_is_spec)

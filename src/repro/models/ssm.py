@@ -1,0 +1,344 @@
+"""SSM blocks: Mamba2 (SSD, chunked matmul form) and RWKV6 (Finch).
+
+TPU adaptation (DESIGN.md §7.6): both recurrences are organized so the
+FLOP-dominant work is MXU matmuls outside any `lax.scan`:
+  * Mamba2 uses the SSD block decomposition — intra-chunk "attention-like"
+    matmuls + an O(cheap) inter-chunk state scan;
+  * RWKV6 runs its per-channel-decay recurrence as a scan over chunk-local
+    steps vectorized across all chunks; the state ops are <1% of the layer's
+    projection FLOPs (measured in EXPERIMENTS.md §Roofline notes).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import shard_act, shard_res
+from repro.models.layers import rms_norm, BF16
+from repro.models.spec import PSpec
+
+
+# ==================================================================== Mamba2
+def mamba2_spec(cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return {
+        "ln": PSpec((d,), ("embed",), init="ones"),
+        # order: [z (gate), x, B, C, dt]
+        "w_in": PSpec((d, 2 * d_in + 2 * s.n_groups * s.d_state + n_heads),
+                      ("embed", "mlp")),
+        "conv_w": PSpec((s.d_conv, conv_dim), ("dconv", "mlp")),
+        "conv_b": PSpec((conv_dim,), ("mlp",), init="zeros"),
+        "a_log": PSpec((n_heads,), (None,), init="zeros", dtype=jnp.float32),
+        "dt_bias": PSpec((n_heads,), (None,), init="zeros", dtype=jnp.float32),
+        "d_skip": PSpec((n_heads,), (None,), init="ones", dtype=jnp.float32),
+        "out_ln": PSpec((d_in,), ("mlp",), init="ones"),
+        "w_out": PSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _mamba_proj(p: dict, x: jax.Array, cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    gn = s.n_groups * s.d_state
+    n_heads = d_in // s.head_dim
+    zxbcdt = shard_act(jnp.einsum("bsd,de->bse", x, p["w_in"]),
+                       "dp", None, "model")
+    z = zxbcdt[..., :d_in]
+    xin = zxbcdt[..., d_in:2 * d_in]
+    Bc = zxbcdt[..., 2 * d_in:2 * d_in + gn]
+    Cc = zxbcdt[..., 2 * d_in + gn:2 * d_in + 2 * gn]
+    dt = zxbcdt[..., 2 * d_in + 2 * gn:]
+    assert dt.shape[-1] == n_heads
+    return z, jnp.concatenate([xin, Bc, Cc], axis=-1), dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d via shifted adds (kernel is tiny)."""
+    k = w.shape[0]
+    out = u * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :u.shape[1]]
+        out = out + shifted * w[k - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def mamba2_apply(p: dict, h: jax.Array, cfg: ArchConfig,
+                 return_cache: bool = False):
+    """Full-sequence SSD. h: (B, S, d). With ``return_cache`` also returns the
+    post-sequence recurrent cache {conv, state} for decode continuation."""
+    s = cfg.ssm
+    B_, S, d = h.shape
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    P, N, G = s.head_dim, s.d_state, s.n_groups
+    cs = s.chunk
+
+    x0 = rms_norm(h, p["ln"], cfg.norm_eps)
+    z, conv_in, dt = _mamba_proj(p, x0, cfg)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+
+    S_real = S
+    pad = (-S) % cs
+    if pad:
+        # dt is forced to 0 at padded steps => identity state transitions
+        conv_out = jnp.pad(conv_out, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    xin = conv_out[..., :d_in]
+    Bc = conv_out[..., d_in:d_in + G * N].reshape(B_, S, G, N)
+    Cc = conv_out[..., d_in + G * N:].reshape(B_, S, G, N)
+
+    a = -jnp.exp(p["a_log"])                                    # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    if pad:
+        t_idx = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
+        dt = dt * (t_idx < S_real)[None, :, None]
+    dA = dt * a                                                  # (B,S,H) <=0
+    nc = S // cs
+
+    xh = xin.reshape(B_, nc, cs, H, P)
+    Bh = Bc.reshape(B_, nc, cs, G, N)
+    Ch = Cc.reshape(B_, nc, cs, G, N)
+    dtc = dt.reshape(B_, nc, cs, H)
+    dAc = dA.reshape(B_, nc, cs, H)
+    cum = jnp.cumsum(dAc, axis=2)                                # (B,nc,cs,H)
+
+    # --- intra-chunk (per-head decay between positions) -------------------
+    rep = H // G
+    att = jnp.einsum("bnigm,bnjgm->bngij", Ch, Bh,
+                     preferred_element_type=jnp.float32)          # (B,nc,G,cs,cs)
+    att = jnp.repeat(att, rep, axis=2)                            # (B,nc,H,cs,cs)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # i,j -> (B,nc,cs,cs,H)
+    decay = jnp.transpose(decay, (0, 1, 4, 2, 3))                 # (B,nc,H,cs,cs)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 1)
+    causal = (ii >= jj)[None, None, None]
+    att = jnp.where(causal, att * jnp.exp(decay), 0.0)
+    att = att * jnp.transpose(dtc, (0, 1, 3, 2))[:, :, :, None, :]
+    y_intra = jnp.einsum("bnhij,bnjhp->bnihp", att.astype(xh.dtype), xh)
+
+    # --- chunk-local states + inter-chunk scan (cheap) ---------------------
+    w_local = jnp.exp(cum[:, :, -1:, :] - cum) * dtc              # (B,nc,cs,H)
+    state_loc = jnp.einsum("bnjgm,bnjh,bnjhp->bnhmp",
+                           Bh.astype(jnp.float32), w_local,
+                           xh.astype(jnp.float32))                # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                       # (B,nc,H)
+
+    def scan_body(carry, inp):
+        st_loc, dec = inp                                         # (B,H,N,P),(B,H)
+        new = carry * dec[..., None, None] + st_loc
+        return new, carry                                          # emit PREVIOUS
+
+    init = jnp.zeros((B_, H, N, P), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_body, init,
+        (state_loc.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                      # (B,nc,H,N,P)
+
+    Ch_h = jnp.repeat(Ch, rep, axis=3).reshape(B_, nc, cs, H, N)
+    y_inter = jnp.einsum("bnihm,bnhmp->bnihp",
+                         (Ch_h * jnp.exp(cum)[..., None]).astype(jnp.float32),
+                         prev_states)
+    y = (y_intra.astype(jnp.float32) + y_inter
+         + xh.astype(jnp.float32) * p["d_skip"][:, None])
+    y = y.reshape(B_, S, d_in)[:, :S_real]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(h.dtype), p["out_ln"], cfg.norm_eps)
+    out = shard_res(h + jnp.einsum("bse,ed->bsd", y, p["w_out"]).astype(h.dtype))
+    if return_cache:
+        cache = {"conv": conv_in[:, S_real - (s.d_conv - 1):S_real].astype(jnp.float32),
+                 "state": final_state}
+        return out, cache
+    return out
+
+
+def mamba2_cache_spec(cfg: ArchConfig, batch: int) -> dict:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return {
+        "conv": PSpec((batch, s.d_conv - 1, conv_dim),
+                      ("batch", None, "mlp"), init="zeros", dtype=jnp.float32),
+        "state": PSpec((batch, H, s.d_state, s.head_dim),
+                       ("batch", "heads", None, None), init="zeros",
+                       dtype=jnp.float32),
+    }
+
+
+def mamba2_decode(p: dict, h: jax.Array, cache: dict, cfg: ArchConfig):
+    """Single-token recurrent step. h: (B, 1, d)."""
+    s = cfg.ssm
+    B_, _, d = h.shape
+    d_in = s.expand * d
+    H, P, N, G = d_in // s.head_dim, s.head_dim, s.d_state, s.n_groups
+    x0 = rms_norm(h, p["ln"], cfg.norm_eps)
+    z, conv_in, dt = _mamba_proj(p, x0, cfg)
+    hist = jnp.concatenate([cache["conv"],
+                            conv_in.astype(jnp.float32)], axis=1)  # (B,k,conv)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist, p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32))
+    xin = conv_out[:, :d_in].reshape(B_, H, P)
+    Bc = conv_out[:, d_in:d_in + G * N].reshape(B_, G, N)
+    Cc = conv_out[:, d_in + G * N:].reshape(B_, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=1)                               # (B,H,N)
+    Chh = jnp.repeat(Cc, rep, axis=1)
+    a = -jnp.exp(p["a_log"])
+    dts = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    dec = jnp.exp(dts * a)                                          # (B,H)
+    new_state = (cache["state"] * dec[..., None, None]
+                 + jnp.einsum("bhm,bh,bhp->bhmp", Bh, dts,
+                              xin.astype(jnp.float32)))
+    y = jnp.einsum("bhm,bhmp->bhp", Chh, new_state) \
+        + xin.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(B_, 1, d_in) * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(h.dtype), p["out_ln"], cfg.norm_eps)
+    out = h + jnp.einsum("bse,ed->bsd", y, p["w_out"]).astype(h.dtype)
+    return out, {"conv": hist[:, 1:], "state": new_state}
+
+
+# ==================================================================== RWKV6
+def rwkv6_spec(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    H, K = cfg.n_heads, cfg.dh
+    lora = 64
+    return {
+        "ln1": PSpec((d,), ("embed",), init="ones"),
+        "ln2": PSpec((d,), ("embed",), init="ones"),
+        # time-mix (wkv6)
+        "mu_x": PSpec((d,), ("embed",), init="zeros", dtype=jnp.float32),
+        "mu_rkvwg": PSpec((5, d), (None, "embed"), init="zeros", dtype=jnp.float32),
+        "ddl_w1": PSpec((d, 5 * 32), ("embed", None)),
+        "ddl_w2": PSpec((5, 32, d), (None, None, "embed")),
+        "w_r": PSpec((d, H, K), ("embed", "heads", "head_dim")),
+        "w_k": PSpec((d, H, K), ("embed", "heads", "head_dim")),
+        "w_v": PSpec((d, H, K), ("embed", "heads", "head_dim")),
+        "w_g": PSpec((d, H, K), ("embed", "heads", "head_dim")),
+        "decay_base": PSpec((H, K), ("heads", "head_dim"), init="zeros",
+                            dtype=jnp.float32),
+        "decay_w1": PSpec((d, lora), ("embed", None)),
+        "decay_w2": PSpec((lora, H, K), (None, "heads", "head_dim")),
+        "bonus_u": PSpec((H, K), ("heads", "head_dim"), init="zeros",
+                         dtype=jnp.float32),
+        "gn_scale": PSpec((H, K), ("heads", "head_dim"), init="ones"),
+        "w_o": PSpec((H, K, d), ("heads", "head_dim", "embed")),
+        # channel-mix
+        "mu_ck": PSpec((d,), ("embed",), init="zeros", dtype=jnp.float32),
+        "mu_cr": PSpec((d,), ("embed",), init="zeros", dtype=jnp.float32),
+        "cm_k": PSpec((d, cfg.d_ff), ("embed", "mlp")),
+        "cm_v": PSpec((cfg.d_ff, d), ("mlp", "embed")),
+        "cm_r": PSpec((d, d), ("embed", "embed2")),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """x_{t-1} with optional carried last token (decode)."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :x.shape[1]]
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1) \
+        if x.shape[1] > 1 else last[:, None]
+
+
+def _ddlerp(p: dict, x: jax.Array, xprev: jax.Array):
+    """RWKV6 data-dependent token-shift: 5 mixed streams (r,k,v,w,g)."""
+    xx = (xprev - x).astype(jnp.float32)
+    base = x + xx * p["mu_x"]
+    hidden = jnp.tanh(jnp.einsum("bsd,de->bse", base.astype(BF16), p["ddl_w1"]))
+    hidden = hidden.reshape(*hidden.shape[:2], 5, 32)
+    dyn = jnp.einsum("bsfe,fed->fbsd", hidden, p["ddl_w2"]).astype(jnp.float32)
+    mixes = p["mu_rkvwg"][:, None, None] + dyn                    # (5,B,S,d)
+    return [(x + xx * m).astype(BF16) for m in mixes]
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Sequential wkv recurrence, vectorized over (B, chunks, heads).
+
+    r,k,v: (B,T,H,K[,V]); w: per-step decay in (0,1) (B,T,H,K);
+    state: (B,H,K,V). Returns out (B,T,H,V), final state.
+    """
+    def body(st, inp):
+        r_t, k_t, v_t, w_t = inp                                  # (B,H,K),(B,H,V)...
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, st + u[None, :, :, None] * kv)
+        st = st * w_t[..., None] + kv
+        return st, out
+
+    rr = r.swapaxes(0, 1)
+    kk = k.swapaxes(0, 1)
+    vv = v.swapaxes(0, 1)
+    ww = w.swapaxes(0, 1)
+    state, outs = jax.lax.scan(body, state, (rr, kk, vv, ww))
+    return outs.swapaxes(0, 1), state
+
+
+def rwkv6_apply(p: dict, h: jax.Array, cfg: ArchConfig,
+                state: jax.Array | None = None, shift_last1=None,
+                shift_last2=None):
+    """Full-sequence RWKV6 layer (time-mix + channel-mix)."""
+    B_, S, d = h.shape
+    H, K = cfg.n_heads, cfg.dh
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, _shift(x, shift_last1))
+    r = shard_act(jnp.einsum("bsd,dhk->bshk", xr, p["w_r"]),
+                  "dp", None, "model", None).astype(jnp.float32)
+    k = shard_act(jnp.einsum("bsd,dhk->bshk", xk, p["w_k"]),
+                  "dp", None, "model", None).astype(jnp.float32)
+    v = shard_act(jnp.einsum("bsd,dhk->bshk", xv, p["w_v"]),
+                  "dp", None, "model", None).astype(jnp.float32)
+    g = jax.nn.silu(shard_act(jnp.einsum("bsd,dhk->bshk", xg, p["w_g"]),
+                              "dp", None, "model", None))
+    dec_dyn = jnp.einsum("bsd,dl->bsl", xw, p["decay_w1"])
+    dec = p["decay_base"][None, None] + jnp.einsum(
+        "bsl,lhk->bshk", jnp.tanh(dec_dyn), p["decay_w2"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec))                                    # (B,S,H,K) in (0,1)
+
+    st0 = jnp.zeros((B_, H, K, K), jnp.float32) if state is None else state
+    out, st = _wkv_scan(r, k, v, w, p["bonus_u"], st0)
+    out = out.reshape(B_, S, H, K)
+    # per-head group norm
+    mu = out.mean(-1, keepdims=True)
+    var = ((out - mu) ** 2).mean(-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 64e-5) * p["gn_scale"].astype(jnp.float32)
+    out = (out * g.astype(jnp.float32)).astype(h.dtype)
+    h = h + jnp.einsum("bshk,hkd->bsd", out, p["w_o"]).astype(h.dtype)
+
+    # channel mix
+    x2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    x2p = _shift(x2, shift_last2)
+    xk2 = (x2 + (x2p - x2) * p["mu_ck"]).astype(BF16)
+    xr2 = (x2 + (x2p - x2) * p["mu_cr"]).astype(BF16)
+    kk = shard_act(jnp.einsum("bsd,df->bsf", xk2, p["cm_k"]),
+                   "dp", None, "model")
+    kk = jnp.square(jax.nn.relu(kk))
+    cv = jnp.einsum("bsf,fd->bsd", kk, p["cm_v"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr2, p["cm_r"]))
+    h = shard_res(h + (rr * cv).astype(h.dtype))
+    return h, st, x[:, -1], x2[:, -1]
+
+
+def rwkv6_cache_spec(cfg: ArchConfig, batch: int) -> dict:
+    H, K = cfg.n_heads, cfg.dh
+    d = cfg.d_model
+    return {
+        "state": PSpec((batch, H, K, K), ("batch", "heads", None, None),
+                       init="zeros", dtype=jnp.float32),
+        "last1": PSpec((batch, d), ("batch", None), init="zeros"),
+        "last2": PSpec((batch, d), ("batch", None), init="zeros"),
+    }
+
+
+def rwkv6_decode(p: dict, h: jax.Array, cache: dict, cfg: ArchConfig):
+    out, st, l1, l2 = rwkv6_apply(p, h, cfg, state=cache["state"],
+                                  shift_last1=cache["last1"],
+                                  shift_last2=cache["last2"])
+    return out, {"state": st, "last1": l1, "last2": l2}

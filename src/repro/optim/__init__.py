@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (Optimizer, make_optimizer, sgd, adamw,
+                                    adamw8bit, adafactor, global_norm_clip)
+from repro.optim.spider import make_spider_controller
+from repro.optim.compression import topk_compress, topk_decompress, int8_compress
+
+__all__ = ["Optimizer", "make_optimizer", "sgd", "adamw", "adamw8bit",
+           "adafactor", "global_norm_clip", "make_spider_controller",
+           "topk_compress", "topk_decompress", "int8_compress"]

@@ -1,0 +1,346 @@
+"""Optimizers with spec-typed, fully shardable state.
+
+Each optimizer exposes
+  state_spec(param_spec_tree) -> PSpec tree   (so the dry-run can lower the
+      whole train step without allocating anything, and state inherits the
+      params' logical sharding)
+  init(params) -> state
+  update(grads, state, params) -> (new_params, new_state)
+
+Implemented: SGD-momentum, AdamW (fp32 master + moments, ZeRO-sharded by
+construction), AdamW-8bit (Dettmers-style block-quantized moments — used where
+HBM is tight), Adafactor (factored second moment — the 671B config).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.spec import PSpec, materialize
+
+QBLOCK = 256  # block size for 8-bit moment quantization
+
+
+def _is_spec(x):
+    return isinstance(x, PSpec)
+
+
+def global_norm_clip(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    state_spec: Callable
+    update: Callable          # (grads, state, params, lr) -> (params, state)
+    lr: float = 1e-3
+    clip_norm: float = 1.0
+
+    def init(self, params, param_spec) -> dict:
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.state_spec(param_spec), is_leaf=_is_spec)
+
+    def abstract_state(self, param_spec):
+        return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                            self.state_spec(param_spec), is_leaf=_is_spec)
+
+
+# --------------------------------------------------------------- SGD momentum
+def _sgd_spec(pspec):
+    mom = jax.tree.map(
+        lambda s: PSpec(s.shape, s.logical, init="zeros", dtype=jnp.float32),
+        pspec, is_leaf=_is_spec)
+    return {"mom": mom, "count": PSpec((), (), init="zeros", dtype=jnp.int32)}
+
+
+def _sgd_update(grads, state, params, lr, *, beta=0.9, clip=1.0):
+    g32, gn = global_norm_clip(grads, clip)
+    mom = jax.tree.map(lambda m, g: beta * m + g, state["mom"], g32)
+    new_p = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr * m)
+                         .astype(p.dtype), params, mom)
+    return new_p, {"mom": mom, "count": state["count"] + 1}, gn
+
+
+# -------------------------------------------------------------------- AdamW
+def _adamw_spec(pspec):
+    f32 = lambda s: PSpec(s.shape, s.logical, init="zeros", dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(f32, pspec, is_leaf=_is_spec),
+        "v": jax.tree.map(f32, pspec, is_leaf=_is_spec),
+        "master": jax.tree.map(f32, pspec, is_leaf=_is_spec),
+        "count": PSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def _adamw_update(grads, state, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                  wd=0.1, clip=1.0):
+    g32, gn = global_norm_clip(grads, clip)
+    cnt = state["count"] + 1
+    t = cnt.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], g32)
+    # master==0 at step 1 means "adopt current params" (init-free warm start)
+    master = jax.tree.map(
+        lambda ms, p: jnp.where(cnt == 1, p.astype(jnp.float32), ms),
+        state["master"], params)
+    master = jax.tree.map(
+        lambda ms, m_, v_: ms - lr * ((m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+                                      + wd * ms),
+        master, m, v)
+    new_p = jax.tree.map(lambda ms, p: ms.astype(p.dtype), master, params)
+    return new_p, {"m": m, "v": v, "master": master, "count": cnt}, gn
+
+
+# --------------------------------------------------------------- AdamW 8-bit
+def _q8_scale_shape(shape):
+    if not shape:
+        return (1,)
+    last = shape[-1]
+    return tuple(shape[:-1]) + (max(1, (last + QBLOCK - 1) // QBLOCK),)
+
+
+def _adamw8_spec(pspec):
+    def q8(s):
+        return PSpec(s.shape, s.logical, init="zeros", dtype=jnp.int8)
+
+    def sc(s):
+        return PSpec(_q8_scale_shape(s.shape),
+                     tuple(s.logical[:-1]) + (None,) if s.shape else (None,),
+                     init="zeros", dtype=jnp.float32)
+
+    f32 = lambda s: PSpec(s.shape, s.logical, init="zeros", dtype=jnp.float32)
+    return {
+        "m_q": jax.tree.map(q8, pspec, is_leaf=_is_spec),
+        "m_s": jax.tree.map(sc, pspec, is_leaf=_is_spec),
+        "v_q": jax.tree.map(q8, pspec, is_leaf=_is_spec),
+        "v_s": jax.tree.map(sc, pspec, is_leaf=_is_spec),
+        "master": jax.tree.map(f32, pspec, is_leaf=_is_spec),
+        "count": PSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def _q8_encode(x):
+    shape = x.shape
+    if not shape:
+        x = x[None]
+        shape = (1,)
+    last = shape[-1]
+    pad = (-last) % QBLOCK
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(*shape[:-1], -1, QBLOCK)
+    s = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    q = jnp.round(xb / jnp.maximum(s, 1e-12)[..., None]).astype(jnp.int8)
+    return q.reshape(*shape[:-1], -1)[..., :last], s
+
+
+def _q8_decode(q, s, shape):
+    last = shape[-1] if shape else 1
+    pad = (-last) % QBLOCK
+    qp = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    xb = qp.reshape(*q.shape[:-1], -1, QBLOCK).astype(jnp.float32)
+    out = (xb * s[..., None]).reshape(*q.shape[:-1], -1)[..., :last]
+    return out.reshape(shape)
+
+
+def _adamw8_update(grads, state, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                   wd=0.1, clip=1.0):
+    g32, gn = global_norm_clip(grads, clip)
+    cnt = state["count"] + 1
+    t = cnt.astype(jnp.float32)
+    bc1, bc2 = 1.0 - b1 ** t, 1.0 - b2 ** t
+
+    def upd(p, g, mq, ms, vq, vs, master):
+        m = b1 * _q8_decode(mq, ms, p.shape) + (1 - b1) * g
+        v = b2 * _q8_decode(vq, vs, p.shape) + (1 - b2) * g * g
+        mst = jnp.where(cnt == 1, p.astype(jnp.float32), master)
+        mst = mst - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * mst)
+        mq2, ms2 = _q8_encode(m)
+        vq2, vs2 = _q8_encode(v)
+        return mst.astype(p.dtype), mq2, ms2, vq2, vs2, mst
+
+    flat_p, td = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(g32)
+    flat_mq = jax.tree.leaves(state["m_q"])
+    flat_ms = jax.tree.leaves(state["m_s"])
+    flat_vq = jax.tree.leaves(state["v_q"])
+    flat_vs = jax.tree.leaves(state["v_s"])
+    flat_ma = jax.tree.leaves(state["master"])
+    outs = [upd(*args) for args in zip(flat_p, flat_g, flat_mq, flat_ms,
+                                       flat_vq, flat_vs, flat_ma)]
+    unz = list(zip(*outs))
+    mk = lambda i: jax.tree.unflatten(td, list(unz[i]))
+    return mk(0), {"m_q": mk(1), "m_s": mk(2), "v_q": mk(3), "v_s": mk(4),
+                   "master": mk(5), "count": cnt}, gn
+
+
+# ------------------------------------------------------------------ Adafactor
+def _adafactor_spec(pspec):
+    def vr(s):
+        if len(s.shape) >= 2:
+            return PSpec(s.shape[:-1], s.logical[:-1], init="zeros",
+                         dtype=jnp.float32)
+        return PSpec(s.shape, s.logical, init="zeros", dtype=jnp.float32)
+
+    def vc(s):
+        if len(s.shape) >= 2:
+            return PSpec(s.shape[:-2] + s.shape[-1:],
+                         s.logical[:-2] + s.logical[-1:], init="zeros",
+                         dtype=jnp.float32)
+        return PSpec((1,), (None,), init="zeros", dtype=jnp.float32)
+
+    return {
+        "vr": jax.tree.map(vr, pspec, is_leaf=_is_spec),
+        "vc": jax.tree.map(vc, pspec, is_leaf=_is_spec),
+        "count": PSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def _sq_einsum(g, axis: int):
+    """Σ g² reduced over one axis — einsum with f32 accumulation, so the
+    bf16 gradient never materializes as an f32 copy (CPU XLA fusion is weak;
+    explicit dots keep the 671B leaves from blowing up the arena)."""
+    letters = "abcdefghij"[:g.ndim]
+    out = letters.replace(letters[axis], "")
+    return jnp.einsum(f"{letters},{letters}->{out}", g, g,
+                      preferred_element_type=jnp.float32)
+
+
+def _adafactor_update(grads, state, params, lr, *, decay=0.8, eps=1e-30,
+                      clip=1.0, wd=0.0, stream_bytes=1 << 27):
+    """Memory-lean Adafactor.
+
+    * global-norm clip folded into the per-leaf update (no f32 grad-tree copy)
+    * factored second-moment stats computed with f32-accumulating einsums
+    * big leaves (>= stream_bytes f32) take a broadcast-elementwise update
+      path without the relative-RMS clip (the global clip still applies) —
+      this keeps per-leaf f32 temporaries fused on the CPU backend too.
+    """
+    def leaf_sq(g):
+        # contract over all axes in place — a reshape(-1) of a sharded leaf
+        # would force GSPMD to all-gather it (observed: +5.7 TiB on 671B)
+        letters = "abcdefghij"[:g.ndim]
+        return jnp.einsum(f"{letters},{letters}->", g, g,
+                          preferred_element_type=jnp.float32)
+
+    gn = jnp.sqrt(sum(leaf_sq(g) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-9))
+    cnt = state["count"] + 1
+    t = cnt.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(p, g, vr, vc):
+        if g.ndim >= 2:
+            s2 = scale * scale
+            vr2 = beta * vr + (1 - beta) * (s2 * _sq_einsum(g, g.ndim - 1)
+                                            / g.shape[-1] + eps)
+            vc2 = beta * vc + (1 - beta) * (s2 * _sq_einsum(g, g.ndim - 2)
+                                            / g.shape[-2] + eps)
+            denom = jnp.maximum(jnp.mean(vr2, axis=-1, keepdims=True), eps)
+            r_fac = jax.lax.rsqrt(jnp.maximum(vr2 / denom, eps))[..., None]
+            c_fac = jax.lax.rsqrt(jnp.maximum(vc2, eps))[..., None, :]
+            u = g.astype(jnp.float32) * scale * r_fac * c_fac
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u)
+            newp = ((1.0 - lr * wd) * p.astype(jnp.float32) - lr * u)
+            return newp.astype(p.dtype), vr2, vc2
+        vr2 = beta * vr + (1 - beta) * (scale * scale * g.astype(jnp.float32) ** 2
+                                        + eps)
+        u = g.astype(jnp.float32) * scale * jax.lax.rsqrt(jnp.maximum(vr2, eps))
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms_u)
+        newp = (1.0 - lr * wd) * p.astype(jnp.float32) - lr * u
+        return newp.astype(p.dtype), vr2, vc
+
+    def upd_leaf(p, g, vr, vc):
+        """Stream big leaves so f32 temporaries stay slice-sized (the CPU
+        backend materializes each elementwise op of a 3.4 GiB chain)."""
+        if p.size * 4 <= stream_bytes:
+            return upd(p, g, vr, vc)
+        if p.ndim >= 3:
+            # layer-stacked leaf: per-layer slices are exact (stats factor
+            # along the leading axis); relative-RMS clip becomes per-layer.
+            return jax.lax.map(lambda a: upd(*a), (p, g, vr, vc))
+        # big 2-D leaf (embedding/head): chunk the row axis; vc (column
+        # stats) from equal-chunk means stays exact, rms clip is per-chunk.
+        rows = p.shape[0]
+        chunks = 1
+        for c in (64, 32, 16, 8, 4, 2):
+            if rows % c == 0 and p.size * 4 // c <= stream_bytes:
+                chunks = c
+                break
+        rs = lambda a: a.reshape(chunks, rows // chunks, *a.shape[1:])
+        vc_parts = jax.lax.map(
+            lambda a: _sq_einsum(a, 0) / a.shape[0], rs(g))
+        vc2 = beta * vc + (1 - beta) * (scale * scale * vc_parts.mean(0) + eps)
+
+        def chunk_upd(a):
+            pc, gc, vrc = a
+            vr2c = beta * vrc + (1 - beta) * (scale * scale
+                                              * _sq_einsum(gc, 1)
+                                              / gc.shape[-1] + eps)
+            return vr2c, pc, gc
+
+        # two passes: (1) vr per chunk, (2) update with the global denom
+        vr2 = jax.lax.map(lambda a: chunk_upd(a)[0], (rs(p), rs(g), rs(vr)))
+        denom = jnp.maximum(jnp.mean(vr2), eps)
+
+        def chunk_new(a):
+            pc, gc, vr2c = a
+            r_fac = jax.lax.rsqrt(jnp.maximum(vr2c / denom, eps))[..., None]
+            c_fac = jax.lax.rsqrt(jnp.maximum(vc2, eps))[None, :]
+            u = gc.astype(jnp.float32) * scale * r_fac * c_fac
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u)
+            return ((1.0 - lr * wd) * pc.astype(jnp.float32)
+                    - lr * u).astype(pc.dtype)
+
+        newp = jax.lax.map(chunk_new, (rs(p), rs(g), vr2))
+        return newp.reshape(p.shape), vr2.reshape(vr.shape), vc2
+
+    flat_p, td = jax.tree.flatten(params)
+    outs = [upd_leaf(p, g, vr, vc) for p, g, vr, vc in zip(
+        flat_p, jax.tree.leaves(grads), jax.tree.leaves(state["vr"]),
+        jax.tree.leaves(state["vc"]))]
+    unz = list(zip(*outs))
+    mk = lambda i: jax.tree.unflatten(td, list(unz[i]))
+    return mk(0), {"vr": mk(1), "vc": mk(2), "count": cnt}, gn
+
+
+# -------------------------------------------------------------------- factory
+def sgd(lr=1e-2, **kw):
+    return Optimizer("sgd", _sgd_spec, partial(_sgd_update, **kw), lr=lr)
+
+
+def adamw(lr=3e-4, **kw):
+    return Optimizer("adamw", _adamw_spec, partial(_adamw_update, **kw), lr=lr)
+
+
+def adamw8bit(lr=3e-4, **kw):
+    return Optimizer("adamw8bit", _adamw8_spec, partial(_adamw8_update, **kw),
+                     lr=lr)
+
+
+def adafactor(lr=1e-2, **kw):
+    return Optimizer("adafactor", _adafactor_spec,
+                     partial(_adafactor_update, **kw), lr=lr)
+
+
+def make_optimizer(name: str, lr: float | None = None) -> Optimizer:
+    table = {"sgd": sgd, "adamw": adamw, "adamw8bit": adamw8bit,
+             "adafactor": adafactor}
+    opt = table[name]()
+    if lr is not None:
+        opt = dataclasses.replace(opt, lr=lr)
+    return opt

@@ -1,0 +1,49 @@
+"""LMC-SPIDER (paper Appendix F): variance-reduced mini-batch gradients.
+
+Improves LMC's convergence from O(eps^-6) to O(eps^-3) by the stochastic
+path-integrated differential estimator: every ``q`` steps take a large-batch
+anchor gradient g_k = ∇L(W_k, S1); in between, update the running estimate
+
+    g_k = ∇L(W_k, S2) - ∇L(W_{k-1}, S2) + g_{k-1}
+
+on small batches S2 — the *same* batch evaluated at current and previous
+params. The controller below is optimizer-agnostic: the trainer calls
+``anchor()`` or ``refine()`` per Algorithm 2's schedule and descends along the
+running estimate.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SpiderState(NamedTuple):
+    g_est: dict         # running gradient estimate (f32 tree)
+    prev_params: dict   # W_{k-1}
+    step: jax.Array
+
+
+def make_spider_controller(q: int = 8):
+    """Returns (init, should_anchor, anchor_update, refine_update)."""
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return SpiderState(g_est=z, prev_params=params, step=jnp.int32(0))
+
+    def should_anchor(state: SpiderState) -> bool:
+        return int(state.step) % q == 0
+
+    def anchor_update(state: SpiderState, params, big_batch_grads):
+        g = jax.tree.map(lambda x: x.astype(jnp.float32), big_batch_grads)
+        return SpiderState(g_est=g, prev_params=params, step=state.step + 1)
+
+    def refine_update(state: SpiderState, params, grads_at_current,
+                      grads_at_prev):
+        g = jax.tree.map(
+            lambda ge, gc, gp: ge + gc.astype(jnp.float32) - gp.astype(jnp.float32),
+            state.g_est, grads_at_current, grads_at_prev)
+        return SpiderState(g_est=g, prev_params=params, step=state.step + 1)
+
+    return init, should_anchor, anchor_update, refine_update

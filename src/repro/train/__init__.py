@@ -1,0 +1,4 @@
+from repro.train.loop import GNNTrainer, FailureInjector
+from repro.train.elastic import rescale_lmc_state
+
+__all__ = ["GNNTrainer", "FailureInjector", "rescale_lmc_state"]

@@ -1,0 +1,40 @@
+"""Elastic rescaling: continue training after the device pool changes.
+
+Params and optimizer state reshard exactly (checkpoint.reshard). The LMC
+historical stores are *soft state*: Thm 2 bounds the staleness contribution by
+C·ρ^{(k-1)/2}, so after a rescale they can be (a) resharded like params, or
+(b) cold-reinitialized, paying only a transient bias spike that decays
+geometrically — the cheap path when the node-partition itself changed
+(cluster count is retuned to the new device count).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HistoricalState, init_history
+from repro.graph import ClusterSampler
+from repro.graph.partition import partition_graph
+
+
+def rescale_lmc_state(graph, store: HistoricalState, *,
+                      old_num_parts: int, new_num_parts: int, seed: int = 0,
+                      reuse_store: bool = True
+                      ) -> tuple[ClusterSampler, HistoricalState]:
+    """Re-partition for a new device count and carry (or reset) the stores.
+
+    The historical values are per-*node*, so they survive a re-partition
+    unchanged when `reuse_store` (partition only changes which rows are
+    updated together); resetting them is also sound (Thm 2).
+    """
+    parts = partition_graph(graph, new_num_parts, seed=seed)
+    sampler = ClusterSampler(graph, new_num_parts, parts=parts, seed=seed)
+    if reuse_store:
+        new_store = store
+    else:
+        L, _, d = store.h.shape
+        new_store = init_history(L, graph.num_nodes, d)
+    return sampler, new_store

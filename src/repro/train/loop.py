@@ -1,0 +1,186 @@
+"""Fault-tolerant training loop for the paper's workload (GNN + LMC).
+
+Production behaviors implemented (and tested in tests/test_fault_tolerance.py):
+  * periodic atomic checkpoints of (params, opt state, historical stores,
+    sampler RNG state, step counter);
+  * crash/preemption recovery: on failure the loop restores the latest
+    checkpoint and continues — the FailureInjector simulates preemptions;
+  * straggler mitigation: a per-step deadline (k × running-median step time);
+    a straggler step's *store updates* can be dropped without violating LMC's
+    convergence assumptions (staleness is bounded by Thm 2's ρ-term — see
+    DESIGN.md §4), which is what `straggler_policy="skip-store"` does;
+  * deterministic resume: the sampler's bit-generator state rides along.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import (HistoricalState, MBMethod, from_graph, accuracy,
+                        init_history, make_train_step, to_device_batch)
+from repro.graph import ClusterSampler
+from repro.models.gnn import GNN
+from repro.optim.optimizers import Optimizer
+
+
+class FailureInjector:
+    """Deterministic simulated preemptions for fault-tolerance tests."""
+
+    def __init__(self, fail_at_steps: tuple = ()):  # global step indices
+        self.fail_at = set(fail_at_steps)
+        self.fired: set = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"simulated preemption at step {step}")
+
+
+class GNNTrainer:
+    def __init__(self, gnn: GNN, method: MBMethod, graph, sampler: ClusterSampler,
+                 optimizer: Optimizer, *, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 50, seed: int = 0,
+                 failure_injector: Optional[FailureInjector] = None,
+                 straggler_deadline: float = 4.0,
+                 straggler_policy: str = "skip-store"):
+        self.gnn = gnn
+        self.method = method
+        self.graph = graph
+        self.sampler = sampler
+        self.opt = optimizer
+        self.data = from_graph(graph)
+        self.failure_injector = failure_injector
+        self.straggler_deadline = straggler_deadline
+        self.straggler_policy = straggler_policy
+
+        self.params = gnn.init_params(jax.random.key(seed))
+        pspec = jax.eval_shape(lambda: self.params)  # shapes only
+        self.opt_state = optimizer.init(self.params, _as_pspec_tree(self.params))
+        self.store = init_history(gnn.num_layers, graph.num_nodes,
+                                  gnn.hidden_dim)
+        self.step_num = 0
+        # no buffer donation: the straggler skip-store policy and elastic
+        # rescale both need the pre-step store to stay alive
+        self._step = jax.jit(make_train_step(gnn, method, graph.num_nodes))
+        self._update = jax.jit(
+            lambda g, s, p: optimizer.update(g, s, p, optimizer.lr))
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self._step_times: list[float] = []
+        self.history: list[dict] = []
+
+    # ----------------------------------------------------------------- state
+    def _state_tree(self):
+        return {"params": self.params, "opt": self.opt_state,
+                "store": tuple(self.store)}
+
+    def save(self) -> None:
+        if self.ckpt is None:
+            return
+        extras = {"step": self.step_num,
+                  "sampler": _jsonable(self.sampler.state_dict())}
+        self.ckpt.save(self.step_num, self._state_tree(), extras)
+
+    def restore(self) -> bool:
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return False
+        tree, extras, step = self.ckpt.restore(self._state_tree())
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.store = HistoricalState(*tree["store"])
+        self.step_num = extras["step"]
+        self.sampler.load_state_dict(_from_jsonable(extras["sampler"]))
+        return True
+
+    # ------------------------------------------------------------------ run
+    def run(self, num_steps: int, *, eval_every: int = 0) -> list[dict]:
+        target = self.step_num + num_steps
+        while self.step_num < target:
+            try:
+                self._one_step()
+            except RuntimeError as e:
+                if "simulated preemption" not in str(e):
+                    raise
+                # crash recovery: restore last checkpoint and continue
+                restored = self.restore()
+                self.history.append({"step": self.step_num,
+                                     "event": "preemption",
+                                     "restored": restored})
+                continue
+            if self.ckpt and self.step_num % self.ckpt_every == 0:
+                self.save()
+            if eval_every and self.step_num % eval_every == 0:
+                self.history.append({"step": self.step_num,
+                                     "val_acc": float(self.eval("val"))})
+        return self.history
+
+    def _one_step(self) -> None:
+        t0 = time.time()
+        sg = self.sampler.sample()
+        batch = to_device_batch(sg)
+        if self.failure_injector is not None:
+            self.failure_injector.maybe_fail(self.step_num)
+        loss, grads, new_store, metrics = self._step(
+            self.params, self.store, batch, self.data.x, self.data.self_w)
+        self.params, self.opt_state, gnorm = self._update(
+            grads, self.opt_state, self.params)
+        dt = time.time() - t0
+        # straggler mitigation: drop the (stale-tolerant) store update when
+        # this step blew its deadline, so the next step isn't gated on it
+        med = float(np.median(self._step_times)) if self._step_times else dt
+        is_straggler = (len(self._step_times) >= 8
+                        and dt > self.straggler_deadline * med)
+        if not (is_straggler and self.straggler_policy == "skip-store"):
+            self.store = new_store
+        self._step_times.append(dt)
+        self.step_num += 1
+        self.history.append({"step": self.step_num, "loss": float(loss),
+                             "train_acc": float(metrics["train_acc"]),
+                             "grad_norm": float(gnorm),
+                             "time_s": dt, "straggler": bool(is_straggler)})
+
+    # ----------------------------------------------------------------- eval
+    def eval(self, split: str = "val") -> float:
+        mask = {"val": self.graph.val_mask, "test": self.graph.test_mask,
+                "train": self.graph.train_mask}[split]
+        return accuracy(self.gnn, self.params, self.data,
+                        jnp.asarray(mask.astype(np.float32)))
+
+
+def _as_pspec_tree(params):
+    from repro.models.spec import PSpec
+    return jax.tree.map(
+        lambda p: PSpec(tuple(p.shape), (None,) * p.ndim, dtype=p.dtype),
+        params)
+
+
+def _jsonable(state: dict):
+    import json
+    return json.loads(json.dumps(state, default=_np_default))
+
+
+def _np_default(o):
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return {"__nd__": o.tolist(), "dtype": str(o.dtype)}
+    raise TypeError(type(o))
+
+
+def _from_jsonable(state):
+    def conv(x):
+        if isinstance(x, dict):
+            if "__nd__" in x:
+                return np.asarray(x["__nd__"], dtype=x["dtype"])
+            return {k: conv(v) for k, v in x.items()}
+        if isinstance(x, list):
+            return [conv(v) for v in x]
+        return x
+    return conv(state)

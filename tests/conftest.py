@@ -1,0 +1,21 @@
+import numpy as np
+import pytest
+from hypothesis import settings, HealthCheck
+
+# fast, CPU-friendly hypothesis profile (single-core container)
+settings.register_profile(
+    "repro", max_examples=12, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("repro")
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graph import make_sbm_dataset
+    return make_sbm_dataset("ppi-cpu", seed=3)
+
+
+@pytest.fixture(scope="session")
+def small_parts(small_graph):
+    from repro.graph import partition_graph
+    return partition_graph(small_graph, 16, seed=0)

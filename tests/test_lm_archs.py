@@ -1,0 +1,96 @@
+"""Per-arch smoke tests: reduced config of the same family, one forward /
+train step on CPU asserting output shapes + no NaNs, plus decode-vs-prefill
+consistency (the recurrent/absorbed-cache paths)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, applicable_shapes, get_config, \
+    reduced_config
+from repro.models.lm import LM
+
+# bf16 + capacity-dropping MoE give the loosest tolerances
+TOL = {"moe": 0.12, "hybrid": 0.05, "default": 0.02}
+
+
+def _mem(cfg, b):
+    if cfg.family in ("vlm", "encdec"):
+        t = cfg.frontend_tokens or 16
+        return (jax.random.normal(jax.random.key(8), (b, t, cfg.d_model))
+                * 0.05).astype(jnp.bfloat16)
+    return None
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke_train(name):
+    cfg = reduced_config(name)
+    lm = LM(cfg)
+    params = lm.init_params(jax.random.key(0))
+    b, s = 2, 64
+    batch = {"tokens": jnp.arange(b * s).reshape(b, s) % cfg.vocab,
+             "loss_mask": jnp.ones((b, s), jnp.float32)}
+    mem = _mem(cfg, b)
+    if mem is not None:
+        batch["memory"] = mem
+    loss = jax.jit(lm.train_loss)(params, batch)
+    assert np.isfinite(float(loss)), (name, float(loss))
+    expected = np.log(cfg.vocab) * (1.3 if cfg.mtp_depth else 1.0)
+    assert abs(float(loss) - expected) < 0.25 * expected
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_decode_matches_prefill(name):
+    cfg = reduced_config(name)
+    lm = LM(cfg)
+    params = lm.init_params(jax.random.key(1))
+    b, s = 2, 32
+    toks = jax.random.randint(jax.random.key(7), (b, s + 1), 0, cfg.vocab)
+    mem = _mem(cfg, b)
+    ref, _ = jax.jit(lambda p, t: lm.prefill(p, t, 64, mem))(params, toks)
+    _, caches = jax.jit(lambda p, t: lm.prefill(p, t, 64, mem))(
+        params, toks[:, :s])
+    out, _ = jax.jit(lambda p, c, t: lm.decode_step(p, c, t, jnp.int32(s),
+                                                    mem))(params, caches,
+                                                          toks[:, s:s + 1])
+    err = (np.abs(np.float32(ref) - np.float32(out)).max()
+           / max(np.abs(np.float32(ref)).max(), 1e-6))
+    tol = TOL.get(cfg.family, TOL["default"])
+    assert err < tol, (name, err)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_grads_finite(name):
+    cfg = reduced_config(name)
+    lm = LM(cfg)
+    params = lm.init_params(jax.random.key(0))
+    b, s = 2, 32
+    batch = {"tokens": jax.random.randint(jax.random.key(3), (b, s), 0,
+                                          cfg.vocab),
+             "loss_mask": jnp.ones((b, s), jnp.float32)}
+    mem = _mem(cfg, b)
+    if mem is not None:
+        batch["memory"] = mem
+    g = jax.jit(jax.grad(lm.train_loss))(params, batch)
+    assert all(np.isfinite(np.float32(x)).all() for x in jax.tree.leaves(g))
+
+
+def test_shape_grid_covers_40_cells():
+    cells = sum(len(applicable_shapes(get_config(a))) for a in ARCH_NAMES)
+    skips = sum(len(SHAPES) - len(applicable_shapes(get_config(a)))
+                for a in ARCH_NAMES)
+    assert cells + skips == 40
+    # long_500k runs exactly for the sub-quadratic archs
+    assert sorted(a for a in ARCH_NAMES
+                  if "long_500k" in applicable_shapes(get_config(a))) == \
+        ["rwkv6-7b", "zamba2-1.2b"]
+
+
+def test_param_counts_match_public_figures():
+    expect = {"llama3.2-1b": 1.24e9, "qwen2.5-32b": 32.8e9,
+              "internlm2-20b": 19.9e9, "deepseek-coder-33b": 33.3e9,
+              "deepseek-v3-671b": 671e9, "deepseek-v2-lite-16b": 15.7e9,
+              "rwkv6-7b": 7.6e9}
+    for name, target in expect.items():
+        got = get_config(name).param_count()
+        assert abs(got - target) / target < 0.2, (name, got, target)

@@ -1,0 +1,130 @@
+"""The paper's core claims, as tests.
+
+  * full-batch exactness: LMC backward message passing == autodiff (Eqs 5-13)
+  * Thm 1: backward-SGD estimates are unbiased over uniform cluster sampling
+  * Fig 3: gradient bias ordering LMC < GAS < Cluster-GCN
+  * the method space (C_f / C_b ablations) runs and stays finite
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CLUSTER, GAS, LMC, METHODS, backward_sgd_grads,
+                        exact_layer_values, from_graph, full_grads,
+                        init_history, make_train_step, to_device_batch)
+from repro.graph import ClusterSampler
+from repro.models import make_gnn
+
+
+def _rel(ga, gb):
+    f1 = jax.tree.leaves(ga)
+    f2 = jax.tree.leaves(gb)
+    num = sum(float(jnp.sum((a - b) ** 2)) for a, b in zip(f1, f2))
+    den = sum(float(jnp.sum(jnp.asarray(b) ** 2)) for b in f2)
+    return (num / max(den, 1e-12)) ** 0.5
+
+
+@pytest.mark.parametrize("arch", ["gcn", "gcnii", "sage", "gin"])
+def test_full_batch_reduces_to_autodiff(arch, small_graph):
+    """Batch == whole graph => LMC grads must equal jax.grad exactly."""
+    g = small_graph
+    data = from_graph(g)
+    gnn = make_gnn(arch, g.feature_dim, 32, g.num_classes, 3)
+    params = gnn.init_params(jax.random.key(0))
+    s = ClusterSampler(g, 1, 1, parts=np.zeros(g.num_nodes, np.int32))
+    sg = s.sample()
+    assert sg.n_halo_real == 0
+    step = jax.jit(make_train_step(gnn, LMC, g.num_nodes))
+    store = init_history(gnn.num_layers, g.num_nodes, 32)
+    loss, grads, _, _ = step(params, store, to_device_batch(sg), data.x,
+                             data.self_w)
+    loss_ref, grads_ref = full_grads(gnn, params, data)
+    assert abs(float(loss) - float(loss_ref)) < 1e-5
+    for a, b in zip(jax.tree.leaves(grads), jax.tree.leaves(grads_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=1e-6)
+
+
+def test_thm1_backward_sgd_unbiased(small_graph, small_parts):
+    """Mean of per-cluster backward-SGD estimates == full gradient (Thm 1)."""
+    g = small_graph
+    data = from_graph(g)
+    gnn = make_gnn("gcn", g.feature_dim, 32, g.num_classes, 2)
+    params = gnn.init_params(jax.random.key(0))
+    hs, vs = exact_layer_values(gnn, params, data)
+    _, gref = full_grads(gnn, params, data)
+    acc = None
+    for p in range(16):
+        nodes = jnp.asarray(np.where(small_parts == p)[0])
+        gp = backward_sgd_grads(gnn, params, data, hs, vs, nodes, scale=16.0)
+        gp = jax.tree.map(lambda x: x / 16.0, gp)
+        acc = gp if acc is None else jax.tree.map(jnp.add, acc, gp)
+    assert _rel(acc, gref["layers"]) < 1e-4
+
+
+def test_gradient_bias_ordering(small_graph, small_parts):
+    """Fig 3: bias(LMC) < bias(GAS) < bias(Cluster) vs exact backward-SGD."""
+    g = small_graph
+    data = from_graph(g)
+    gnn = make_gnn("gcn", g.feature_dim, 32, g.num_classes, 3)
+    params = gnn.init_params(jax.random.key(0))
+    hs, vs = exact_layer_values(gnn, params, data)
+    biases = {}
+    for name in ("lmc", "gas", "cluster"):
+        m = METHODS[name]
+        s = ClusterSampler(g, 16, 2, parts=small_parts, seed=1,
+                           include_halo=m.include_halo,
+                           edge_weight_mode=m.edge_weight_mode,
+                           stochastic=False)
+        step = jax.jit(make_train_step(gnn, m, g.num_nodes))
+        store = init_history(gnn.num_layers, g.num_nodes, 32)
+        for _ in range(3):
+            for sg in s.epoch():
+                _, _, store, _ = step(params, store, to_device_batch(sg),
+                                      data.x, data.self_w)
+        errs = []
+        for sg in s.epoch():
+            _, gm, store, _ = step(params, store, to_device_batch(sg),
+                                   data.x, data.self_w)
+            nodes = jnp.asarray(sg.batch_gids[sg.batch_mask > 0])
+            gsgd = backward_sgd_grads(gnn, params, data, hs, vs, nodes,
+                                      scale=8.0)
+            errs.append(_rel(gm["layers"], gsgd))
+        biases[name] = float(np.mean(errs))
+    assert biases["lmc"] < biases["gas"] < biases["cluster"], biases
+
+
+@pytest.mark.parametrize("name", list(METHODS))
+def test_all_methods_finite(name, small_graph, small_parts):
+    g = small_graph
+    data = from_graph(g)
+    m = METHODS[name]
+    gnn = make_gnn("gcn", g.feature_dim, 16, g.num_classes, 2)
+    params = gnn.init_params(jax.random.key(1))
+    s = ClusterSampler(g, 16, 1, parts=small_parts, seed=0,
+                       include_halo=m.include_halo,
+                       edge_weight_mode=m.edge_weight_mode)
+    step = jax.jit(make_train_step(gnn, m, g.num_nodes))
+    store = init_history(2, g.num_nodes, 16)
+    loss, grads, store, metrics = step(params, store,
+                                       to_device_batch(s.sample()),
+                                       data.x, data.self_w)
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(grads))
+
+
+def test_store_updates_only_batch_rows(small_graph, small_parts):
+    g = small_graph
+    data = from_graph(g)
+    gnn = make_gnn("gcn", g.feature_dim, 16, g.num_classes, 2)
+    params = gnn.init_params(jax.random.key(1))
+    s = ClusterSampler(g, 16, 1, parts=small_parts, seed=0)
+    step = jax.jit(make_train_step(gnn, LMC, g.num_nodes))
+    store = init_history(2, g.num_nodes, 16)
+    sg = s.sample()
+    _, _, store2, _ = step(params, store, to_device_batch(sg), data.x,
+                           data.self_w)
+    changed = np.where(np.any(np.asarray(store2.h[0]) != 0, axis=-1))[0]
+    batch = set(sg.batch_gids[sg.batch_mask > 0].tolist())
+    assert set(changed.tolist()) <= batch
