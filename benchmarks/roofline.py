@@ -44,7 +44,7 @@ def _cell_costs(cfg, shape, mesh, profile, collect=True):
     """flops/bytes(/collective bytes) of one unrolled shallow build."""
     import jax
     from repro.launch.steps import build_cell
-    from repro.launch.dryrun import collective_bytes
+    from repro.launch.dryrun import collective_bytes, cost_analysis_dict
 
     lm, step, args, shs = build_cell(cfg, shape, mesh,
                                      depth_profile=profile, unroll=True)
@@ -52,7 +52,7 @@ def _cell_costs(cfg, shape, mesh, profile, collect=True):
         lowered = jax.jit(step, in_shardings=shs).lower(*args)
         compiled = lowered.compile(
             compiler_options={"xla_backend_optimization_level": "0"})
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())["total"] if collect else 0.0
     return (float(ca.get("flops", 0.0)),
             float(ca.get("bytes accessed", 0.0)), float(coll))

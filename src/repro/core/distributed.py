@@ -19,12 +19,11 @@ from __future__ import annotations
 
 from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.lmc import Batch
+from repro.dist import sharding as dist
 from repro.graph.structure import PaddedSubgraph
 
 
@@ -77,30 +76,20 @@ def spmd_shardings(mesh, *, model_axis: str | None = "model"):
     """(batch, store, x_full, self_w, params) shardings for the LMC step.
 
     Rows and stores shard along the data (and pod) axes; the feature dimension
-    of the stores/activations shards along `model_axis` when wide enough.
+    of the stores/activations shards along `model_axis` when wide enough. All
+    specs derive from `repro.dist.sharding` — the same source the LM decode
+    caches and the launcher use.
     """
-    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    dp = data_axes if len(data_axes) > 1 else data_axes[0]
-    feat = model_axis if model_axis in mesh.axis_names else None
+    row = dist.row_sharding(mesh)
+    rep = dist.replicated(mesh)
     batch_sh = Batch(
-        batch_gids=NamedSharding(mesh, P(dp)),
-        halo_gids=NamedSharding(mesh, P(dp)),
-        batch_mask=NamedSharding(mesh, P(dp)),
-        halo_mask=NamedSharding(mesh, P(dp)),
-        edge_src=NamedSharding(mesh, P(dp)),
-        edge_dst=NamedSharding(mesh, P(dp)),
-        edge_w=NamedSharding(mesh, P(dp)),
-        labels=NamedSharding(mesh, P(dp)),
-        labeled_mask=NamedSharding(mesh, P(dp)),
-        beta=NamedSharding(mesh, P(dp)),
-        loss_scale=NamedSharding(mesh, P()),
-        grad_scale=NamedSharding(mesh, P()),
+        batch_gids=row, halo_gids=row, batch_mask=row, halo_mask=row,
+        edge_src=row, edge_dst=row, edge_w=row, labels=row, labeled_mask=row,
+        beta=row, loss_scale=rep, grad_scale=rep,
     )
-    store_sh = {
-        "h": NamedSharding(mesh, P(None, dp, feat)),
-        "v": NamedSharding(mesh, P(None, dp, feat)),
-    }
-    x_sh = NamedSharding(mesh, P(dp, None))
-    sw_sh = NamedSharding(mesh, P(dp))
-    param_sh = NamedSharding(mesh, P())  # replicated (GNN weights are small)
+    store = dist.store_sharding(mesh, model_axis=model_axis)
+    store_sh = {"h": store, "v": store}
+    x_sh = dist.named(mesh, dist.dp_entry(mesh), None)
+    sw_sh = row
+    param_sh = rep  # replicated (GNN weights are small)
     return batch_sh, store_sh, x_sh, sw_sh, param_sh

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.history import HistoricalState, gather_rows, scatter_rows
 from repro.core.methods import MBMethod
+from repro.dist.sharding import concat_rows
 from repro.graph.structure import PaddedSubgraph
 from repro.models.gnn import GNN, EdgeList, LayerAux
 
@@ -82,7 +83,9 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int
     def step(params: dict, store: HistoricalState, batch: Batch,
              x_full: jax.Array, self_w_full: jax.Array):
         nb = batch.batch_gids.shape[0]
-        ext_gids = jnp.concatenate([batch.batch_gids, batch.halo_gids])
+        # concat_rows (not jnp.concatenate): [batch | halo] row blocks must
+        # keep explicit shardings under SPMD — see repro.dist.sharding
+        ext_gids = concat_rows([batch.batch_gids, batch.halo_gids])
         x_ext = jnp.take(x_full, ext_gids, axis=0, mode="clip")
         self_w_ext = jnp.take(self_w_full, ext_gids, axis=0, mode="clip")
         edges = EdgeList(batch.edge_src, batch.edge_dst, batch.edge_w)
@@ -105,7 +108,7 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int
             h_hat_halo = _combine(method.fwd_mode, beta, hist, h_out[nb:], hmask)
             new_h = new_h.at[l].set(scatter_rows(
                 new_h[l], batch.batch_gids, batch.batch_mask, h_bar_batch, num_nodes))
-            h_in = jnp.concatenate([h_bar_batch, h_hat_halo], axis=0)
+            h_in = concat_rows([h_bar_batch, h_hat_halo], axis=0)
 
         # ---------------- loss & top-layer adjoints (Eq. 6/14 + V^L init) ----
         inv_vl = batch.loss_scale / batch.grad_scale  # = 1/|V_L|
@@ -142,13 +145,13 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int
                 return gnn.layer_apply(lp_, _l, hin_, aux._replace(h0=h0_))
 
             _, vjp_fn = jax.vjp(f, lp, residuals[l], h0_ext)
-            ct_batch = jnp.concatenate([V_bar, jnp.zeros_like(V_hat)], axis=0)
+            ct_batch = concat_rows([V_bar, jnp.zeros_like(V_hat)], axis=0)
             g_lp, hgrad_b, h0grad_b = vjp_fn(ct_batch)
             grads_layers[l] = g_lp
             if method.bwd_mode == "none":
                 hgrad, h0grad = hgrad_b, h0grad_b
             else:
-                ct_full = jnp.concatenate([V_bar, V_hat], axis=0)
+                ct_full = concat_rows([V_bar, V_hat], axis=0)
                 _, hgrad, h0grad = vjp_fn(ct_full)
             v0_acc = v0_acc + h0grad
             if l >= 1:
@@ -171,7 +174,7 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int
         }
         if params["embed"]:
             _, vjp_emb = jax.vjp(lambda e: gnn.embed_apply(e, x_ext), params["embed"])
-            (g_emb,) = vjp_emb(v0_acc * jnp.concatenate(
+            (g_emb,) = vjp_emb(v0_acc * concat_rows(
                 [bmask, jnp.zeros_like(hmask)], axis=0))
             grads["embed"] = jax.tree.map(lambda x: scale * x, g_emb)
         else:

@@ -1,0 +1,27 @@
+"""`repro.dist` — the sharding subsystem (DESIGN.md §4).
+
+Two layers:
+  * :mod:`repro.dist.mesh`      — version-compatible mesh construction
+    (feature-detects `jax.make_mesh` / `AxisType`, falls back to
+    `mesh_utils.create_device_mesh`);
+  * :mod:`repro.dist.sharding`  — the single source of truth for how
+    activations, LMC historical stores, stacked multi-device Batches and LM
+    decode caches map onto mesh axes: constraint helpers (`shard_act`,
+    `shard_res`), the activation-sharding mesh registry, and the
+    `NamedSharding` factories the launcher / dry-run / trainer consume.
+
+Everything degrades to a no-op off-mesh so single-device smoke tests run the
+exact same model code as the 512-device dry-run.
+"""
+from repro.dist.mesh import make_mesh, make_production_mesh
+from repro.dist.sharding import (activation_sharding, current_mesh, data_axes,
+                                 dp_axis_size, dp_entry, model_axis_size,
+                                 named, replicated, row_sharding, shard_act,
+                                 shard_res, store_sharding)
+
+__all__ = [
+    "make_mesh", "make_production_mesh",
+    "activation_sharding", "current_mesh", "data_axes", "dp_axis_size",
+    "dp_entry", "model_axis_size", "named", "replicated", "row_sharding",
+    "shard_act", "shard_res", "store_sharding",
+]

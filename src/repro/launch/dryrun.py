@@ -37,6 +37,15 @@ DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8}
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """`Compiled.cost_analysis()` returns a dict on new jax but a
+    one-element list of dicts on jax 0.4.x — normalize to the dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def collective_bytes(hlo_text: str) -> dict:
     """Per-device bytes moved by collectives, from the SPMD module text.
 
@@ -105,7 +114,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t0
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     res = {
         "arch": arch, "shape": shape_name,
@@ -149,9 +158,10 @@ def run_gnn_cell(*, multi_pod: bool, verbose: bool = True) -> dict:
     from repro.models import make_gnn
     import jax.numpy as jnp
 
+    from repro.dist.sharding import dp_axis_size
+
     mesh = make_production_mesh(multi_pod=multi_pod)
-    ndp = int(np.prod([mesh.shape[a] for a in mesh.axis_names
-                       if a in ("pod", "data")]))
+    ndp = dp_axis_size(mesh)
     # production-scale synthetic stand-in: 16M nodes, d=512 GCNII
     n_nodes = 16 * 2**20
     d, dx, L, ncls = 512, 512, 4, 64
@@ -190,7 +200,7 @@ def run_gnn_cell(*, multi_pod: bool, verbose: bool = True) -> dict:
         compiled = lowered.compile()
     t_compile = time.time() - t0
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     res = {
         "arch": "gnn-lmc-gcnii", "shape": f"n{n_nodes}_d{d}_L{L}",

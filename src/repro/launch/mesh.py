@@ -1,27 +1,14 @@
-"""Production mesh construction.
+"""Production mesh construction — thin façade over :mod:`repro.dist.mesh`.
 
 A FUNCTION, not a module-level constant — importing this module never touches
 jax device state (required so smoke tests see 1 device while the dry-run sees
-512 placeholder devices via XLA_FLAGS).
+512 placeholder devices via XLA_FLAGS). Kept as the launcher-facing import
+path; the implementation (and jax version compatibility) lives in
+`repro.dist.mesh`, and axis bookkeeping in `repro.dist.sharding`.
 """
 from __future__ import annotations
 
-import jax
+from repro.dist.mesh import make_mesh, make_production_mesh
+from repro.dist.sharding import data_axes
 
-
-def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-
-
-def make_mesh(shape: tuple, axes: tuple) -> jax.sharding.Mesh:
-    """Arbitrary mesh (tests, elastic re-scale)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-
-
-def data_axes(mesh: jax.sharding.Mesh) -> tuple:
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+__all__ = ["make_mesh", "make_production_mesh", "data_axes"]

@@ -11,11 +11,10 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.dist.sharding import activation_sharding
+from repro.dist.sharding import activation_sharding, dp_axis_size, dp_entry
 from repro.models.lm import LM
 from repro.models.spec import abstract, default_rules, shardings as spec_shardings
 from repro.optim.optimizers import Optimizer, make_optimizer
@@ -26,10 +25,6 @@ def fsdp_axes_for(cfg: ArchConfig, mesh: Mesh) -> tuple:
     if cfg.fsdp_over_pod and "pod" in mesh.axis_names:
         axes = ("pod", "data")
     return axes
-
-
-def data_axes_in(mesh: Mesh) -> tuple:
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
 # ------------------------------------------------------------------ steps
@@ -94,15 +89,13 @@ def input_specs(cfg: ArchConfig, lm: LM, shape: ShapeConfig, mesh: Mesh,
     pspec_tree = lm.params_spec()
     params_abs = abstract(pspec_tree)
     params_sh = spec_shardings(pspec_tree, rules, mesh)
-    dp = data_axes_in(mesh)
-    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    dp = dp_entry(mesh)
     B, S = shape.global_batch, shape.seq_len
 
     def tok_sh(bdim_divisible: bool):
         return NamedSharding(mesh, P(dp if bdim_divisible else None, None))
 
-    ndev_dp = int(np.prod([mesh.shape[a] for a in data_axes_in(mesh)]))
-    b_ok = B % max(ndev_dp, 1) == 0
+    b_ok = B % max(dp_axis_size(mesh), 1) == 0
 
     if shape.kind == "train":
         batch_abs: dict[str, Any] = {

@@ -1,0 +1,22 @@
+"""Shared subprocess harness for multi-device SPMD tests.
+
+Device count is locked at jax init, so anything needing fake devices runs in
+a fresh interpreter with XLA_FLAGS set. Used by test_distributed.py and
+test_dist_sharding.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_spmd(code: str, *, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout

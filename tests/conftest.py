@@ -1,8 +1,17 @@
+import os
+import sys
+
 import numpy as np
 import pytest
-from hypothesis import settings, HealthCheck
 
-# fast, CPU-friendly hypothesis profile (single-core container)
+# make `from _prop import ...` resolve from test modules under any pytest
+# import mode (and degrade gracefully when hypothesis is absent — see _prop)
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from _prop import HAVE_HYPOTHESIS, HealthCheck, settings
+
+# fast, CPU-friendly hypothesis profile (single-core container); a no-op
+# under the _prop fallback
 settings.register_profile(
     "repro", max_examples=12, deadline=None,
     suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])

@@ -4,24 +4,9 @@ Small placeholder-device meshes validate the same code paths the 512-device
 dry-run uses: the flat multi-cluster LMC step under data/model sharding, and
 an LM train step with the full production sharding rules.
 """
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(code: str) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               PYTHONPATH=os.path.join(REPO, "src"))
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env, timeout=560)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+from _spmd import run_spmd as _run
 
 
 def test_distributed_lmc_step_matches_single_device():

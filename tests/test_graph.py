@@ -1,7 +1,7 @@
 """Graph substrate: structures, partitioner, sampler invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _prop import given, strategies as st
 
 from repro.graph import (ClusterSampler, edge_cut_fraction, make_sbm_dataset,
                          partition_graph)

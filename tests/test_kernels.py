@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.kernels import (build_ell, bucketed_spmm, ell_aggregate_fn,
                            ell_spmm, lmc_compensate)

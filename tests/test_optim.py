@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.models.spec import PSpec, abstract
 from repro.optim import adafactor, adamw, adamw8bit, sgd, global_norm_clip
