@@ -1,7 +1,11 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows. Run:
+Prints ``name,us_per_call,derived`` CSV rows and writes one machine-readable
+``experiments/bench/BENCH_<name>.json`` artifact per benchmark ({name,
+backend, rows: {entry: {us_per_call, ...}}}) so the perf trajectory stays
+trackable across PRs. Run:
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+                                           [--backend {segment,ell}]
 
 Paper mapping (DESIGN.md §6):
   bench_grad_error            -> Fig 3   (relative mini-batch gradient error)
@@ -16,6 +20,8 @@ Paper mapping (DESIGN.md §6):
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import time
 from pathlib import Path
 
@@ -178,7 +184,7 @@ def bench_ablation_compensation(fast=False):
 
 
 # --------------------------------------------------------------- App E.2
-def bench_time_per_epoch(fast=False):
+def bench_time_per_epoch(fast=False, backend="segment"):
     import jax
     from repro.core import (METHODS, init_history, make_train_step,
                             to_device_batch)
@@ -190,9 +196,9 @@ def bench_time_per_epoch(fast=False):
         s = ClusterSampler(g, 16, 2, parts=parts, seed=0,
                            include_halo=m.include_halo,
                            edge_weight_mode=m.edge_weight_mode)
-        step = jax.jit(make_train_step(gnn, m, g.num_nodes))
+        step = jax.jit(make_train_step(gnn, m, g.num_nodes, backend=backend))
         store = init_history(gnn.num_layers, g.num_nodes, gnn.hidden_dim)
-        batches = [to_device_batch(sg) for sg in s.epoch()]
+        batches = [to_device_batch(sg, backend=backend) for sg in s.epoch()]
 
         def epoch():
             nonlocal store
@@ -201,8 +207,8 @@ def bench_time_per_epoch(fast=False):
             jax.block_until_ready(store.h)
 
         us = _timer(epoch, iters=2 if fast else 4)
-        rows[name] = us
-        print(f"time_per_epoch/{name},{us:.0f},epoch_s={us/1e6:.3f}",
+        rows[f"{name}_{backend}"] = {"us_per_call": us, "backend": backend}
+        print(f"time_per_epoch/{name}_{backend},{us:.0f},epoch_s={us/1e6:.3f}",
               flush=True)
     return rows
 
@@ -214,6 +220,7 @@ def bench_message_retention(fast=False):
     from repro.graph import ClusterSampler
     g, data, gnn, params, parts = _setup()
     total = g.num_edges
+    rows = {}
     for name in ("lmc", "gas", "cluster"):
         m = METHODS[name]
         s = ClusterSampler(g, 16, 2, parts=parts, seed=0,
@@ -239,9 +246,12 @@ def bench_message_retention(fast=False):
                 intra = (sg.edge_src[:ne] < nb) & (sg.edge_dst[:ne] < nb)
                 bwd_edges.update(code[intra].tolist())
         us = (time.time() - t0) * 1e6
+        rows[name] = {"us_per_call": us, "fwd": len(fwd_edges) / total,
+                      "bwd": len(bwd_edges) / total}
         print(f"message_retention/{name},{us:.0f},"
               f"fwd={len(fwd_edges)/total:.2%};bwd={len(bwd_edges)/total:.2%}",
               flush=True)
+    return rows
 
 
 # --------------------------------------------------------------------- App F
@@ -290,13 +300,17 @@ def bench_spider(fast=False):
     print(f"spider,{us:.0f},plain_err={np.mean(plain_errs):.4f};"
           f"spider_err={np.mean(spider_errs):.4f}", flush=True)
     assert np.mean(spider_errs) < np.mean(plain_errs)
+    return {"spider": {"us_per_call": us,
+                       "plain_err": float(np.mean(plain_errs)),
+                       "spider_err": float(np.mean(spider_errs))}}
 
 
 # ----------------------------------------------------------------- kernels
 def bench_spmm_kernel(fast=False):
     import jax
     import jax.numpy as jnp
-    from repro.kernels import build_ell, bucketed_spmm
+    from repro.kernels import build_ell, bucketed_spmm, default_interpret
+    from repro.kernels.ops import _build_ell_loop
     from repro.kernels.ref import degree_bucket_spmm_ref
     g, data, gnn, params, parts = _setup()
     row = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
@@ -307,14 +321,54 @@ def bench_spmm_kernel(fast=False):
     ptr, ind, wj = (jnp.asarray(g.indptr), jnp.asarray(g.indices),
                     jnp.asarray(ws))
     ref = jax.jit(lambda h_: degree_bucket_spmm_ref(ptr, ind, wj, h_))
-    us_ref = _timer(lambda: jax.block_until_ready(ref(h)))
+    # identical protocol for both paths: _timer warms up (compile/trace) then
+    # averages the same number of steady-state iterations
+    iters = 2 if fast else 3
+    us_ref = _timer(lambda: jax.block_until_ready(ref(h)), iters=iters)
     us_krn = _timer(lambda: jax.block_until_ready(bucketed_spmm(ell, h)),
-                    iters=1)
+                    iters=iters)
     nnz = g.num_edges
-    print(f"spmm/jnp_segment_sum,{us_ref:.0f},"
-          f"gflops={2*nnz*128/us_ref/1e3:.2f}", flush=True)
-    print(f"spmm/pallas_interpret,{us_krn:.0f},"
-          f"note=interpret-mode;TPU-target-not-CPU-representative", flush=True)
+    gflops_ref = 2 * nnz * 128 / us_ref / 1e3
+    gflops_krn = 2 * nnz * 128 / us_krn / 1e3
+    mode = "interpret" if default_interpret() else "compiled"
+    rows = {
+        "jnp_segment_sum": {"us_per_call": us_ref, "gflops": gflops_ref},
+        f"pallas_{mode}": {"us_per_call": us_krn, "gflops": gflops_krn},
+    }
+    print(f"spmm/jnp_segment_sum,{us_ref:.0f},gflops={gflops_ref:.2f}",
+          flush=True)
+    print(f"spmm/pallas_{mode},{us_krn:.0f},gflops={gflops_krn:.2f}"
+          + (";note=interpret-mode;TPU-target-not-CPU-representative"
+             if mode == "interpret" else ""), flush=True)
+
+    # ELL preprocessing: vectorized bulk-numpy builder vs the original
+    # per-node Python loop, on a 50k-node synthetic CSR graph
+    rng = np.random.default_rng(1)
+    n50, avg_deg = 50_000, 10
+    e50 = n50 * avg_deg
+    dst = np.sort(rng.integers(0, n50, e50))
+    indptr50 = np.zeros(n50 + 1, np.int64)
+    indptr50[1:] = np.cumsum(np.bincount(dst, minlength=n50))
+    indices50 = rng.integers(0, n50, e50).astype(np.int32)
+    ws50 = rng.random(e50).astype(np.float32)
+    t0 = time.time()
+    _build_ell_loop(indptr50, indices50, ws50)
+    us_loop = (time.time() - t0) * 1e6
+    us_vec = _timer(lambda: build_ell(indptr50, indices50, ws50,
+                                      with_transpose=False), iters=iters)
+    speedup = us_loop / us_vec
+    rows["build_ell_loop_50k"] = {"us_per_call": us_loop}
+    rows["build_ell_vectorized_50k"] = {"us_per_call": us_vec,
+                                        "speedup_vs_loop": speedup}
+    print(f"spmm/build_ell_loop_50k,{us_loop:.0f},n=50000", flush=True)
+    print(f"spmm/build_ell_vectorized_50k,{us_vec:.0f},"
+          f"speedup_vs_loop={speedup:.1f}x", flush=True)
+    if speedup < 10.0:
+        # don't abort the harness (artifacts must still be written for the
+        # remaining benches); scripts/check.sh enforces the tripwire
+        print(f"# WARNING: vectorized build_ell only {speedup:.1f}x faster "
+              f"than the loop (expected >= 10x)", flush=True)
+    return rows
 
 
 BENCHES = {
@@ -330,15 +384,32 @@ BENCHES = {
 
 
 def main() -> None:
+    import jax
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--backend", default="segment",
+                    choices=["segment", "ell"],
+                    help="aggregation hot path for train-step benches")
     args = ap.parse_args()
     OUT.mkdir(parents=True, exist_ok=True)
     names = [args.only] if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:
-        BENCHES[n](fast=args.fast)
+        fn = BENCHES[n]
+        kw = {"fast": args.fast}
+        if "backend" in inspect.signature(fn).parameters:
+            kw["backend"] = args.backend
+        rows = fn(**kw)
+        artifact = {"name": n, "backend": jax.default_backend(),
+                    "agg_backend": kw.get("backend", "segment"),
+                    "rows": rows or {}}
+        # the kernel bench is the cross-PR perf tripwire: short stable name
+        path = OUT / {"spmm_kernel": "BENCH_spmm.json"}.get(n,
+                                                            f"BENCH_{n}.json")
+        path.write_text(json.dumps(artifact, indent=2, sort_keys=True))
+        print(f"# wrote {path.relative_to(ROOT)}", flush=True)
 
 
 if __name__ == "__main__":

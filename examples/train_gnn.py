@@ -5,6 +5,8 @@ onto.
 
     PYTHONPATH=src python examples/train_gnn.py --steps 400 --preset arxiv-cpu
     PYTHONPATH=src python examples/train_gnn.py --preset arxiv-like   # 169k nodes
+    PYTHONPATH=src python examples/train_gnn.py --backend ell  # Pallas SpMM/
+        # compensate kernels on the hot path (compiled on TPU, interpreted on CPU)
 """
 import argparse
 import time
@@ -27,6 +29,10 @@ def main():
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--parts", type=int, default=32)
     ap.add_argument("--clusters-per-batch", type=int, default=4)
+    ap.add_argument("--backend", default="segment", choices=["segment", "ell"],
+                    help="aggregation hot path: jnp segment-sum or the Pallas "
+                         "bucketed-ELL SpMM/compensate kernels (compiled on "
+                         "TPU, interpreter fallback on CPU)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_gnn_ckpt")
     args = ap.parse_args()
 
@@ -44,7 +50,8 @@ def main():
                              include_halo=m.include_halo,
                              edge_weight_mode=m.edge_weight_mode)
     tr = GNNTrainer(gnn, m, g, sampler, sgd(lr=0.2), seed=0,
-                    ckpt_dir=args.ckpt_dir, ckpt_every=100)
+                    ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                    backend=args.backend)
     if tr.restore():
         print(f"resumed from checkpoint at step {tr.step_num}")
 

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 test suite + the kernel perf tripwire.
+#   scripts/check.sh [extra pytest args...]
+# The spmm benchmark writes experiments/bench/BENCH_spmm.json and asserts the
+# vectorized ELL builder's >=10x speedup over the legacy loop.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+python -m pytest -x -q "$@"
+python -m benchmarks.run --fast --only spmm_kernel
+python - <<'EOF'
+import json
+rows = json.load(open("experiments/bench/BENCH_spmm.json"))["rows"]
+speedup = rows["build_ell_vectorized_50k"]["speedup_vs_loop"]
+assert speedup >= 10.0, f"vectorized build_ell only {speedup:.1f}x faster"
+print(f"check OK: build_ell vectorized {speedup:.1f}x over the loop")
+EOF

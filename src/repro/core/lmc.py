@@ -14,7 +14,7 @@ table (Table 5).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,11 +24,20 @@ from repro.core.history import HistoricalState, gather_rows, scatter_rows
 from repro.core.methods import MBMethod
 from repro.dist.sharding import concat_rows
 from repro.graph.structure import PaddedSubgraph
+from repro.kernels import ELLGraph, ell_from_coo, lmc_compensate
 from repro.models.gnn import GNN, EdgeList, LayerAux
+
+AGG_BACKENDS = ("segment", "ell")
 
 
 class Batch(NamedTuple):
-    """Device-side view of a PaddedSubgraph (all jnp arrays)."""
+    """Device-side view of a PaddedSubgraph (all jnp arrays).
+
+    ``ell`` (optional) carries the batch-local adjacency re-bucketed into the
+    Pallas kernel's padded-ELL layout (built host-side by ``to_device_batch``
+    with fixed per-bucket capacities, so every batch of a sampler shares one
+    jit trace); required by ``make_train_step(..., backend="ell")``.
+    """
     batch_gids: jax.Array
     halo_gids: jax.Array
     batch_mask: jax.Array
@@ -41,16 +50,24 @@ class Batch(NamedTuple):
     beta: jax.Array
     loss_scale: jax.Array
     grad_scale: jax.Array
+    ell: Optional[ELLGraph] = None
 
 
-def to_device_batch(sg: PaddedSubgraph) -> Batch:
+def to_device_batch(sg: PaddedSubgraph, *, backend: str = "segment",
+                    ell_buckets=(8, 32, 128)) -> Batch:
+    assert backend in AGG_BACKENDS, backend
+    ell = None
+    if backend == "ell":
+        ell = ell_from_coo(sg.edge_src, sg.edge_dst, sg.edge_w, sg.n_ext,
+                           buckets=ell_buckets)
     return Batch(
         batch_gids=jnp.asarray(sg.batch_gids), halo_gids=jnp.asarray(sg.halo_gids),
         batch_mask=jnp.asarray(sg.batch_mask), halo_mask=jnp.asarray(sg.halo_mask),
         edge_src=jnp.asarray(sg.edge_src), edge_dst=jnp.asarray(sg.edge_dst),
         edge_w=jnp.asarray(sg.edge_w), labels=jnp.asarray(sg.labels),
         labeled_mask=jnp.asarray(sg.labeled_mask), beta=jnp.asarray(sg.beta),
-        loss_scale=jnp.asarray(sg.loss_scale), grad_scale=jnp.asarray(sg.grad_scale))
+        loss_scale=jnp.asarray(sg.loss_scale), grad_scale=jnp.asarray(sg.grad_scale),
+        ell=ell)
 
 
 def _combine(mode: str, beta: jax.Array, hist: jax.Array, fresh: jax.Array,
@@ -69,20 +86,53 @@ def _combine(mode: str, beta: jax.Array, hist: jax.Array, fresh: jax.Array,
     return out * mask
 
 
-def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int
-                    ) -> Callable:
+def _compensate(mode: str, backend: str, store_l: jax.Array,
+                halo_gids: jax.Array, beta1d: jax.Array, fresh: jax.Array,
+                mask1d: jax.Array) -> jax.Array:
+    """Halo compensation ĥ/V̂ (Eq. 9/12): gather the historical rows and
+    convex-combine with the incomplete fresh values.
+
+    backend="segment": jnp gather + lerp. backend="ell": one fused Pallas
+    ``lmc_compensate`` call — every mode is the same kernel with an effective
+    β (lmc: β, historical: 0, fresh: 1); "none" skips the gather entirely.
+    """
+    if mode == "none":
+        return jnp.zeros_like(fresh)
+    if backend == "ell":
+        beta_eff = {"lmc": beta1d,
+                    "historical": jnp.zeros_like(beta1d),
+                    "fresh": jnp.ones_like(beta1d)}[mode]
+        return lmc_compensate(store_l, halo_gids, beta_eff, fresh, mask1d)
+    hist = gather_rows(store_l, halo_gids)
+    return _combine(mode, beta1d[:, None], hist, fresh, mask1d[:, None])
+
+
+def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int, *,
+                    backend: str = "segment") -> Callable:
     """Build ``step(params, store, batch, x_full, self_w_full)``.
 
     Returns ``(loss, grads, new_store, metrics)``. Pure; jit/pjit at call site
     with ``donate_argnums=(1,)`` for the store.
+
+    ``backend`` selects the aggregation hot path: ``"segment"`` is the jnp
+    segment-sum oracle; ``"ell"`` runs layer aggregation through the Pallas
+    bucketed ELL SpMM (forward *and*, via its custom VJP, the per-layer
+    ``jax.vjp`` cotangent applications of Eqs. 11-13) and halo compensation
+    through the fused ``lmc_compensate`` kernel. The batch must then carry the
+    bucketed adjacency (``to_device_batch(sg, backend="ell")``).
     """
     method.validate()
+    assert backend in AGG_BACKENDS, backend
     L = gnn.num_layers
     layer0_input_is_h0 = gnn.arch == "gcnii"
 
     def step(params: dict, store: HistoricalState, batch: Batch,
              x_full: jax.Array, self_w_full: jax.Array):
         nb = batch.batch_gids.shape[0]
+        if backend == "ell" and batch.ell is None:
+            raise ValueError(
+                'backend="ell" needs batch.ell; build the batch with '
+                'to_device_batch(sg, backend="ell")')
         # concat_rows (not jnp.concatenate): [batch | halo] row blocks must
         # keep explicit shardings under SPMD — see repro.dist.sharding
         ext_gids = concat_rows([batch.batch_gids, batch.halo_gids])
@@ -90,11 +140,11 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int
         self_w_ext = jnp.take(self_w_full, ext_gids, axis=0, mode="clip")
         edges = EdgeList(batch.edge_src, batch.edge_dst, batch.edge_w)
         h0_ext = gnn.embed_apply(params["embed"], x_ext)
-        aux = LayerAux(edges=edges, x=x_ext, h0=h0_ext, self_w=self_w_ext)
+        aux = LayerAux(edges=edges, x=x_ext, h0=h0_ext, self_w=self_w_ext,
+                       ell=batch.ell if backend == "ell" else None)
 
         bmask = batch.batch_mask[:, None]
         hmask = batch.halo_mask[:, None]
-        beta = batch.beta[:, None]
 
         # ---------------- forward (Eqs. 8-10) --------------------------------
         h_in = h0_ext
@@ -104,8 +154,9 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int
             residuals.append(h_in)
             h_out = gnn.layer_apply(gnn.layer_params(params, l), l, h_in, aux)
             h_bar_batch = h_out[:nb] * bmask
-            hist = gather_rows(new_h[l], batch.halo_gids)
-            h_hat_halo = _combine(method.fwd_mode, beta, hist, h_out[nb:], hmask)
+            h_hat_halo = _compensate(method.fwd_mode, backend, new_h[l],
+                                     batch.halo_gids, batch.beta, h_out[nb:],
+                                     batch.halo_mask)
             new_h = new_h.at[l].set(scatter_rows(
                 new_h[l], batch.batch_gids, batch.batch_mask, h_bar_batch, num_nodes))
             h_in = concat_rows([h_bar_batch, h_hat_halo], axis=0)
@@ -156,8 +207,9 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int
             v0_acc = v0_acc + h0grad
             if l >= 1:
                 V_bar_next = hgrad[:nb] * bmask
-                hist_v = gather_rows(new_v[l - 1], batch.halo_gids)
-                V_hat = _combine(method.bwd_mode, beta, hist_v, hgrad[nb:], hmask)
+                V_hat = _compensate(method.bwd_mode, backend, new_v[l - 1],
+                                    batch.halo_gids, batch.beta, hgrad[nb:],
+                                    batch.halo_mask)
                 new_v = new_v.at[l - 1].set(scatter_rows(
                     new_v[l - 1], batch.batch_gids, batch.batch_mask,
                     V_bar_next, num_nodes))

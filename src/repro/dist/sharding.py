@@ -154,8 +154,9 @@ def shard_res(x: jax.Array) -> jax.Array:
     return shard_act(x, "dp", *(None,) * (x.ndim - 1))
 
 
-def concat_rows(parts: Sequence[jax.Array], axis: int = 0) -> jax.Array:
-    """Concatenate row blocks with explicitly pinned operand shardings.
+def concat_rows(parts: Sequence[jax.Array], axis: int = 0,
+                labels: Optional[Sequence] = None) -> jax.Array:
+    """Concatenate array blocks with explicitly pinned result sharding.
 
     jax 0.4.37's partitioner miscompiles `concatenate` whenever an operand or
     the result is sharded on a multi-axis mesh: the output comes back summed
@@ -164,12 +165,18 @@ def concat_rows(parts: Sequence[jax.Array], axis: int = 0) -> jax.Array:
     explicit constraints on the operands). `dynamic_update_slice` of the same
     blocks into a zeros buffer partitions correctly for every tested sharding
     combination, so on-mesh the concat is expressed that way, with the result
-    pinned to the row sharding. The pin is total (non-row dims replicated) and
-    applied even when the row axis resolves to replicated — leaving the result
-    unconstrained would hand it back to the propagation pass that miscompiles;
-    a (rows, model-sharded-features) output is deliberately traded for
-    correctness here. Off-mesh this is exactly `jnp.concatenate`, so
-    mesh-agnostic core code can use it unconditionally.
+    pinned to an explicit sharding. The pin is total and applied even when
+    every label resolves to replicated — leaving the result unconstrained
+    would hand it back to the propagation pass that miscompiles. Off-mesh this
+    is exactly `jnp.concatenate`, so mesh-agnostic core code can use it
+    unconditionally.
+
+    ``labels`` gives one :func:`shard_act`-style label per result dim (for
+    feature-axis concats of sharded activations, e.g. the MLA nope|rope
+    head-dim concat). Default: ``"dp"`` on `axis`, replicated elsewhere — the
+    [batch | halo] row-block layout of `core/lmc.py`. A (rows,
+    model-sharded-features) default output is deliberately traded for
+    correctness here.
     """
     parts = list(parts)
     mesh = current_mesh()
@@ -186,8 +193,9 @@ def concat_rows(parts: Sequence[jax.Array], axis: int = 0) -> jax.Array:
         start[axis] = offset
         out = jax.lax.dynamic_update_slice(out, x.astype(dtype), tuple(start))
         offset += int(x.shape[axis])
-    labels = [None] * out.ndim
-    labels[axis] = "dp"
+    if labels is None:
+        labels = [None] * out.ndim
+        labels[axis % out.ndim] = "dp"
     spec = resolve_spec(mesh, out.shape, labels)
     return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, spec))
 

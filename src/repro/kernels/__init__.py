@@ -1,17 +1,25 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
   ell_spmm.py    — blocked-ELL SpMM (the GNN aggregation the paper's CUDA
-                   backend implements with scatter/gather); ref: ref.ell_spmm_ref
+                   backend implements with scatter/gather); vectorized tile
+                   kernel with scalar-prefetched index tiles; ref:
+                   ref.ell_spmm_ref
   compensate.py  — fused gather + convex-combination for LMC Eq. (9)/(12)
-  ops.py         — jit wrappers: degree-bucketed production SpMM, AggregateFn
+  ops.py         — differentiable jit wrappers: degree-bucketed production
+                   SpMM + compensate with custom VJPs (transpose-graph
+                   backward), bulk-numpy ELL builders, AggregateFn
   ref.py         — pure-jnp oracles
 
-Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling, 8x128
-aligned) and validated here in interpret mode (CPU container).
+Kernels are written for TPU (pl.pallas_call + PrefetchScalarGridSpec VMEM
+tiling, 8x128 aligned). ``interpret`` autodetects per backend: compiled Mosaic
+on TPU, interpreter fallback on CPU containers (DESIGN.md §3).
 """
-from repro.kernels.ops import (ELLGraph, build_ell, bucketed_spmm, ell_spmm,
-                               lmc_compensate, ell_aggregate_fn)
+from repro.kernels.ops import (ELLGraph, build_ell, bucketed_spmm,
+                               default_interpret, ell_aggregate_fn,
+                               ell_from_coo, ell_spmm, fixed_row_capacity,
+                               lmc_compensate)
 from repro.kernels import ref
 
-__all__ = ["ELLGraph", "build_ell", "bucketed_spmm", "ell_spmm",
-           "lmc_compensate", "ell_aggregate_fn", "ref"]
+__all__ = ["ELLGraph", "build_ell", "ell_from_coo", "fixed_row_capacity",
+           "bucketed_spmm", "ell_spmm", "lmc_compensate", "ell_aggregate_fn",
+           "default_interpret", "ref"]

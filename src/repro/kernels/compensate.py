@@ -1,9 +1,16 @@
 """Fused LMC compensation kernel — Eq. (9)/(12)'s gather + convex-combine.
 
-The per-halo-node update  ĥ_i = (1-β_i)·H̄[gid_i] + β_i·h̃_i  is a gather from
-the (node-sharded) historical store fused with the lerp and validity mask, so
-the historical row never round-trips through HBM twice. Tiles follow the same
-(rows × feature-block) layout as the SpMM kernel.
+The per-halo-node update  ĥ_i = m_i·[(1-β_i)·H̄[gid_i] + β_i·h̃_i]  is a gather
+from the (node-sharded) historical store fused with the lerp and validity
+mask, so the historical row never round-trips through HBM twice.
+
+Kernel layout mirrors ell_spmm.py: the gather ids ride in as a scalar-prefetch
+operand (SMEM), a row loop copies the gathered store rows into a
+(block_rows, block_d) VMEM scratch, and the lerp+mask runs as one broadcast
+multiply-add over the whole tile (β and mask arrive as (N, 1) lane-broadcast
+columns). ``interpret=None`` autodetects compiled-vs-interpreted like
+ell_spmm. This module exposes the shape-aligned raw kernel call; the padded,
+differentiable production entry point is ``ops.lmc_compensate``.
 """
 from __future__ import annotations
 
@@ -12,44 +19,68 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ell_spmm import default_interpret
 
 
-def _comp_kernel(gid_ref, beta_ref, mask_ref, fresh_ref, store_ref, o_ref):
-    bn, bd = o_ref.shape
+def _comp_kernel(gid_ref, beta_ref, mask_ref, fresh_ref, store_ref, o_ref,
+                 gath_ref, *, block_rows: int):
+    row0 = pl.program_id(0) * block_rows
 
-    def row_body(i, _):
-        g = gid_ref[i]
-        hist = pl.load(store_ref, (pl.dslice(g, 1), slice(None)))[0]
-        b = beta_ref[i]
-        out = mask_ref[i] * ((1.0 - b) * hist + b * fresh_ref[i, :])
-        pl.store(o_ref, (pl.dslice(i, 1), slice(None)), out[None])
+    def gather_row(r, _):
+        g = gid_ref[row0 + r]
+        gath_ref[pl.ds(r, 1), :] = store_ref[pl.ds(g, 1), :]
         return 0
 
-    jax.lax.fori_loop(0, bn, row_body, 0)
+    jax.lax.fori_loop(0, block_rows, gather_row, 0)
+    b = beta_ref[:]          # (bn, 1) broadcast over lanes
+    o_ref[:] = mask_ref[:] * ((1.0 - b) * gath_ref[:] + b * fresh_ref[:])
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_d",
                                              "interpret"))
-def lmc_compensate(store: jax.Array, gids: jax.Array, beta: jax.Array,
-                   fresh: jax.Array, mask: jax.Array, *,
-                   block_rows: int = 256, block_d: int = 128,
-                   interpret: bool = True) -> jax.Array:
-    """store (M, D); gids/beta/mask (N,); fresh (N, D) -> (N, D)."""
+def lmc_compensate_kernel(store: jax.Array, gids: jax.Array, beta: jax.Array,
+                          fresh: jax.Array, mask: jax.Array, *,
+                          block_rows: int = 256, block_d: int = 128,
+                          interpret: bool | None = None) -> jax.Array:
+    """store (M, D); gids/beta/mask (N,); fresh (N, D) -> (N, D).
+
+    Requires N % block_rows == 0 and D % block_d == 0 (``ops.lmc_compensate``
+    pads and adds the custom VJP).
+    """
+    if interpret is None:
+        interpret = default_interpret()
     n, d = fresh.shape
     m = store.shape[0]
     assert n % block_rows == 0 and d % block_d == 0, (n, d)
+    if not interpret and m * block_d * store.dtype.itemsize > 12 * 2**20:
+        # the gather source rides as one (M, block_d) VMEM block: full-graph
+        # stores blow VMEM on the compiled path until HBM-DMA row streaming
+        # lands (ROADMAP). Shard/partition the store, or stay interpreted.
+        raise ValueError(
+            f"lmc_compensate: store block ({m}, {block_d}) "
+            f"{m * block_d * store.dtype.itemsize / 2**20:.0f} MiB exceeds "
+            "the compiled-path VMEM budget (12 MiB); see ROADMAP (HBM-DMA "
+            "store streaming)")
     grid = (n // block_rows, d // block_d)
-    return pl.pallas_call(
-        _comp_kernel,
+    beta2 = beta.reshape(n, 1).astype(fresh.dtype)
+    mask2 = mask.reshape(n, 1).astype(fresh.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # gids -> SMEM
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_rows,), lambda i, j: (i,)),
-            pl.BlockSpec((block_rows,), lambda i, j: (i,)),
-            pl.BlockSpec((block_rows,), lambda i, j: (i,)),
-            pl.BlockSpec((block_rows, block_d), lambda i, j: (i, j)),
-            pl.BlockSpec((m, block_d), lambda i, j: (0, j)),
+            pl.BlockSpec((block_rows, 1), lambda i, j, gid: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i, j, gid: (i, 0)),
+            pl.BlockSpec((block_rows, block_d), lambda i, j, gid: (i, j)),
+            pl.BlockSpec((m, block_d), lambda i, j, gid: (0, j)),
         ],
-        out_specs=pl.BlockSpec((block_rows, block_d), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((block_rows, block_d), lambda i, j, gid: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_rows, block_d), fresh.dtype)],
+    )
+    return pl.pallas_call(
+        functools.partial(_comp_kernel, block_rows=block_rows),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, d), fresh.dtype),
         interpret=interpret,
-    )(gids, beta, mask, fresh, store)
+    )(gids, beta2, mask2, fresh, store)

@@ -4,11 +4,28 @@ TPU adaptation of the CUDA scatter/gather SpMM the paper's PyG backend uses
 (DESIGN.md §3): neighbor lists are padded to a per-bucket width K (powers of
 two, host-side degree bucketing bounds the padding waste), giving a dense
 (N, K) index/weight layout whose row tiles stream through VMEM; features are
-blocked along D so a (rows_block, D_block) output tile accumulates K gathered
-rows at a time. All tile dims are multiples of (8, 128) for VREG/MXU layout.
+blocked along D so a (block_rows, block_d) output tile accumulates K gathered
+neighbor planes at a time.
+
+Kernel layout (vectorized — no per-row scalar accumulation):
+  * the neighbor-index array rides in as a *scalar-prefetch* operand
+    (``pltpu.PrefetchScalarGridSpec``), so row indices are resolved from SMEM
+    before the VMEM gathers they drive;
+  * for each k < K the kernel copies the k-th neighbor row of every row in the
+    tile into a (block_rows, block_d) VMEM scratch via dynamic slices, then
+    accumulates ``w[:, k:k+1] * gathered`` as one broadcast multiply-add over
+    the whole tile — the VPU lanes stay full instead of reducing one (D,)
+    vector per row at a time.
+
+``interpret=None`` autodetects the backend: compiled Mosaic on TPU,
+interpreter fallback elsewhere (CPU containers cannot lower Mosaic kernels).
+All tile dims are multiples of (8, 128) for VREG/MXU layout.
 
 VMEM budget per grid step (defaults): h block (M≤8192, 128) f32 = 4 MiB,
-idx/w tiles (256, K≤128) = 256 KiB, out tile (256, 128) = 128 KiB.
+w tile (256, K≤128) = 128 KiB, out tile + gather scratch (256, 128) ×2 =
+256 KiB; the full (N, K≤128) int32 index array lives in SMEM (scalar
+prefetch), which bounds practical N·K for the compiled path — the bucketed
+wrapper (ops.py) keeps per-call index arrays at mini-batch scale.
 """
 from __future__ import annotations
 
@@ -17,51 +34,77 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _spmm_kernel(idx_ref, w_ref, h_ref, o_ref, *, K: int):
-    """One (row-tile × feature-tile) step: gather-accumulate K neighbors."""
-    bn = o_ref.shape[0]
-    bd = o_ref.shape[1]
+def default_interpret() -> bool:
+    """True when the Pallas kernels should run interpreted (no TPU present)."""
+    return jax.default_backend() != "tpu"
 
-    def row_body(i, _):
-        def k_body(k, acc):
-            j = idx_ref[i, k]
-            vec = pl.load(h_ref, (pl.dslice(j, 1), slice(None)))   # (1, BD)
-            return acc + w_ref[i, k] * vec[0]
 
-        acc = jax.lax.fori_loop(0, K, k_body,
-                                jnp.zeros((bd,), o_ref.dtype))
-        pl.store(o_ref, (pl.dslice(i, 1), slice(None)), acc[None])
+def _spmm_kernel(idx_ref, w_ref, h_ref, o_ref, gath_ref, acc_ref, *, K: int,
+                 block_rows: int):
+    """One (row-tile × feature-tile) step: gather-accumulate K neighbors.
+
+    idx_ref: full (N, K) int32 in SMEM (scalar prefetch); w_ref: (bn, K) VMEM
+    tile; h_ref: (M, bd) VMEM feature block; gath_ref: (bn, bd) VMEM scratch;
+    acc_ref: (bn, bd) f32 accumulator (full precision even for bf16 inputs).
+    """
+    row0 = pl.program_id(0) * block_rows
+    acc_ref[:] = jnp.zeros_like(acc_ref)
+
+    def k_step(k, _):
+        def gather_row(r, _):
+            j = idx_ref[row0 + r, k]
+            gath_ref[pl.ds(r, 1), :] = h_ref[pl.ds(j, 1), :]
+            return 0
+
+        jax.lax.fori_loop(0, block_rows, gather_row, 0)
+        acc_ref[:] += (w_ref[:, pl.ds(k, 1)].astype(jnp.float32)
+                       * gath_ref[:].astype(jnp.float32))
         return 0
 
-    jax.lax.fori_loop(0, bn, row_body, 0)
+    jax.lax.fori_loop(0, K, k_step, 0)
+    o_ref[:] = acc_ref[:].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_d",
                                              "interpret"))
 def ell_spmm(nbr_idx: jax.Array, nbr_w: jax.Array, h: jax.Array, *,
              block_rows: int = 256, block_d: int = 128,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool | None = None) -> jax.Array:
     """out[i] = Σ_k w[i,k] · h[idx[i,k]]  via pl.pallas_call.
 
     nbr_idx/nbr_w: (N, K); h: (M, D). N must divide by block_rows and D by
-    block_d (the ops.py wrapper pads). ``interpret=True`` executes the kernel
-    body in Python on CPU (this container has no TPU).
+    block_d (the ops.py wrapper pads). ``interpret=None`` autodetects:
+    compiled on TPU, interpreted elsewhere.
     """
+    if interpret is None:
+        interpret = default_interpret()
     n, k = nbr_idx.shape
     m, d = h.shape
     assert n % block_rows == 0 and d % block_d == 0, (n, d)
+    if not interpret and m * block_d * h.dtype.itemsize > 12 * 2**20:
+        raise ValueError(
+            f"ell_spmm: feature block ({m}, {block_d}) "
+            f"{m * block_d * h.dtype.itemsize / 2**20:.0f} MiB exceeds the "
+            "compiled-path VMEM budget (12 MiB) — mini-batch-scale gather "
+            "sources only until HBM-DMA streaming lands (ROADMAP)")
     grid = (n // block_rows, d // block_d)
-    return pl.pallas_call(
-        functools.partial(_spmm_kernel, K=k),
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # nbr_idx -> SMEM, readable before DMA
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_rows, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_rows, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((m, block_d), lambda i, j: (0, j)),
+            pl.BlockSpec((block_rows, k), lambda i, j, idx: (i, 0)),
+            pl.BlockSpec((m, block_d), lambda i, j, idx: (0, j)),
         ],
-        out_specs=pl.BlockSpec((block_rows, block_d), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((block_rows, block_d), lambda i, j, idx: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_rows, block_d), h.dtype),
+                        pltpu.VMEM((block_rows, block_d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_spmm_kernel, K=k, block_rows=block_rows),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, d), h.dtype),
         interpret=interpret,
     )(nbr_idx, nbr_w, h)

@@ -1,22 +1,40 @@
-"""jit'd production wrappers around the Pallas kernels.
+"""jit'd, differentiable production wrappers around the Pallas kernels.
 
 `bucketed_spmm` is the deployable aggregation: rows are degree-bucketed host
 side (powers of two) so ELL padding waste stays < 2x, each bucket runs one
-`ell_spmm` pallas_call, and the results concatenate back in row order.
-`ell_aggregate_fn` adapts it to the GNN `AggregateFn` interface so the paper's
-models can swap the jnp segment-sum oracle for the kernel with one argument.
+`ell_spmm` pallas_call, and the results concatenate back in row order. It is a
+`jax.custom_vjp`: the transpose of an ELL SpMM is an SpMM over the transposed
+adjacency, so `build_ell` also buckets Aᵀ and the backward pass runs through
+the same kernel (this is what lets `core/lmc.py`'s per-layer ``jax.vjp`` calls
+stay on the kernel path — DESIGN.md §3).
+
+`lmc_compensate` is the differentiable, shape-padding entry point for the
+fused gather+lerp compensation kernel (Eq. 9/12); its VJP scatters the store
+cotangent and keeps β/mask/fresh gradients exact against the jnp oracle.
+
+`build_ell` / `ell_from_coo` are bulk-numpy preprocessors (degree bucketing
+via repeat/searchsorted, heavy-row splitting via chunk index arithmetic — no
+per-node Python loop); `ell_from_coo` additionally fixes per-bucket row
+capacities from the padded batch sizes so every mini-batch of a sampler
+traces to the same jit shapes.
+
+`ell_aggregate_fn` adapts the SpMM to the GNN `AggregateFn` interface so the
+paper's models can swap the jnp segment-sum oracle for the kernel with one
+argument; the train step selects it with ``make_train_step(...,
+backend="ell")``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import NamedTuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.compensate import lmc_compensate
-from repro.kernels.ell_spmm import ell_spmm
+from repro.kernels.compensate import lmc_compensate_kernel
+from repro.kernels.ell_spmm import default_interpret, ell_spmm
 from repro.kernels import ref
 
 
@@ -24,21 +42,105 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-class ELLGraph(NamedTuple):
-    """Degree-bucketed padded-ELL adjacency (host-built, device arrays)."""
+def _pick_block_rows(rows: int) -> int:
+    """Largest power-of-two tile height ≤ 256 dividing the padded row count."""
+    for b in (256, 128, 64, 32, 16, 8):
+        if rows % b == 0:
+            return b
+    raise ValueError(f"ELL bucket rows {rows} not a multiple of 8")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ELLGraph:
+    """Degree-bucketed padded-ELL adjacency (host-built, device arrays).
+
+    Registered as a pytree so it can ride through ``jit`` (as part of a Batch)
+    and through ``jax.custom_vjp``: the index/weight/row arrays are children,
+    the row/col counts are static aux data, and ``transpose`` (the bucketed
+    Aᵀ, used by the SpMM VJP) is a nested child.
+    """
     bucket_idx: tuple      # per bucket: (rows_b, K_b) int32 neighbor ids
     bucket_w: tuple        # per bucket: (rows_b, K_b) f32 weights
     bucket_rows: tuple     # per bucket: (rows_b,) int32 destination rows
-    num_rows: int
+    num_rows: int          # output rows (static)
+    num_cols: int          # gather-source rows, == h.shape[0] (static)
+    transpose: Optional["ELLGraph"] = None
+
+    def tree_flatten(self):
+        return ((self.bucket_idx, self.bucket_w, self.bucket_rows,
+                 self.transpose), (self.num_rows, self.num_cols))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        idx, w, rows, t = children
+        return cls(bucket_idx=idx, bucket_w=w, bucket_rows=rows,
+                   num_rows=aux[0], num_cols=aux[1], transpose=t)
 
 
-def build_ell(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
-              buckets=(8, 32, 128), block_rows: int = 256) -> ELLGraph:
-    """CSR -> degree-bucketed ELL. Rows with deg > max(buckets) are split
-    into multiple partial rows (their partial sums add via the final
-    scatter-add, keeping K bounded)."""
+# --------------------------------------------------------------- host builders
+def _ell_buckets(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
+                 buckets: Sequence[int], block_rows: int,
+                 row_capacity: Optional[Sequence[int]]):
+    """CSR -> per-bucket (idx, w, rows) arrays, fully vectorized.
+
+    Reproduces the row order of the original per-node loop exactly: rows are
+    emitted in (node, chunk) order; each chunk of ≤ kmax neighbors lands in
+    the smallest bucket that fits it; deg-0 nodes emit one empty bucket-0 row.
+    """
     n = indptr.shape[0] - 1
-    deg = np.diff(indptr)
+    deg = np.diff(indptr).astype(np.int64)
+    kmax = int(buckets[-1])
+
+    # one row per kmax-chunk of each neighbor list (deg-0 nodes get one chunk)
+    nchunks = np.maximum((deg + kmax - 1) // kmax, 1)
+    row_node = np.repeat(np.arange(n, dtype=np.int64), nchunks)
+    first = np.zeros(n, np.int64)
+    first[1:] = np.cumsum(nchunks)[:-1]
+    chunk_start = (np.arange(row_node.shape[0], dtype=np.int64)
+                   - np.repeat(first, nchunks)) * kmax
+    chunk_len = np.clip(deg[row_node] - chunk_start, 0, kmax)
+    bucket_of = np.searchsorted(np.asarray(buckets, np.int64), chunk_len)
+
+    b_idx, b_w, b_rows = [], [], []
+    for b, k in enumerate(buckets):
+        sel = np.flatnonzero(bucket_of == b)   # preserves (node, chunk) order
+        rows = sel.shape[0]
+        if row_capacity is not None:
+            rows_pad = int(row_capacity[b])
+            if rows > rows_pad:
+                raise ValueError(
+                    f"bucket {b} (K={k}): {rows} rows exceed capacity {rows_pad}")
+        else:
+            rows_pad = max(_round_up(rows, block_rows), block_rows)
+        idx = np.zeros((rows_pad, k), np.int32)
+        w = np.zeros((rows_pad, k), np.float32)
+        rid = np.full((rows_pad,), n, np.int32)  # pad rows -> dropped
+        if rows:
+            if indices.shape[0]:
+                base = indptr[row_node[sel]] + chunk_start[sel]
+                offs = np.arange(k, dtype=np.int64)
+                valid = offs[None, :] < chunk_len[sel][:, None]
+                pos = np.where(valid, base[:, None] + offs[None, :], 0)
+                idx[:rows] = np.where(valid, indices[pos], 0).astype(np.int32)
+                w[:rows] = np.where(valid, weights[pos], 0.0).astype(np.float32)
+            # else: edgeless graph — every row is an all-padding deg-0 row
+            rid[:rows] = row_node[sel].astype(np.int32)
+        b_idx.append(jnp.asarray(idx))
+        b_w.append(jnp.asarray(w))
+        b_rows.append(jnp.asarray(rid))
+    return tuple(b_idx), tuple(b_w), tuple(b_rows)
+
+
+def _build_ell_loop(indptr, indices, weights, buckets=(8, 32, 128),
+                    block_rows: int = 256):
+    """Original per-node Python-loop builder.
+
+    Kept only as the correctness reference for the vectorized `build_ell`
+    (property-tested against it) and as the baseline of the preprocessing
+    benchmark; O(n) interpreted Python — do not use on large graphs.
+    """
+    n = indptr.shape[0] - 1
     kmax = buckets[-1]
     b_idx, b_w, b_rows = [], [], []
     row_ids = [[] for _ in buckets]
@@ -48,7 +150,6 @@ def build_ell(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
     for v in range(n):
         lo, hi = indptr[v], indptr[v + 1]
         nbrs, ws = indices[lo:hi], weights[lo:hi]
-        # split heavy rows into K-sized partial rows
         for s in range(0, max(len(nbrs), 1), kmax):
             part_n = nbrs[s:s + kmax]
             part_w = ws[s:s + kmax]
@@ -64,7 +165,7 @@ def build_ell(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
         rows_pad = max(_round_up(rows, block_rows), block_rows)
         idx = np.zeros((rows_pad, k), np.int32)
         w = np.zeros((rows_pad, k), np.float32)
-        rid = np.full((rows_pad,), n, np.int32)  # pad rows -> dropped
+        rid = np.full((rows_pad,), n, np.int32)
         if rows:
             idx[:rows] = np.stack(row_idx[b])
             w[:rows] = np.stack(row_ws[b])
@@ -72,24 +173,227 @@ def build_ell(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
         b_idx.append(jnp.asarray(idx))
         b_w.append(jnp.asarray(w))
         b_rows.append(jnp.asarray(rid))
-    return ELLGraph(tuple(b_idx), tuple(b_w), tuple(b_rows), n)
+    return ELLGraph(tuple(b_idx), tuple(b_w), tuple(b_rows),
+                    num_rows=n, num_cols=n)
 
 
-def bucketed_spmm(g: ELLGraph, h: jax.Array, *, interpret: bool = True
-                  ) -> jax.Array:
+def _transpose_csr(indptr, indices, weights, num_cols):
+    """CSR of A -> CSR of Aᵀ (bulk numpy: one argsort over the edge list)."""
+    n = indptr.shape[0] - 1
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    order = np.argsort(indices, kind="stable")
+    counts = np.bincount(indices, minlength=num_cols)
+    t_indptr = np.zeros(num_cols + 1, np.int64)
+    t_indptr[1:] = np.cumsum(counts)
+    return t_indptr, rows[order].astype(np.int32), \
+        np.asarray(weights)[order].astype(np.float32)
+
+
+def build_ell(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
+              buckets=(8, 32, 128), block_rows: int = 256, *,
+              num_cols: Optional[int] = None,
+              row_capacity: Optional[Sequence[int]] = None,
+              with_transpose: bool = True) -> ELLGraph:
+    """CSR -> degree-bucketed ELL (bulk numpy, no per-node Python loop).
+
+    Rows with deg > max(buckets) are split into multiple partial rows (their
+    partial sums add via the final scatter-add, keeping K bounded). When
+    ``with_transpose`` the transposed adjacency is bucketed too, giving the
+    SpMM its custom-VJP backward graph. ``row_capacity`` (per-bucket padded
+    row counts, applied to both directions) fixes the array shapes so every
+    batch of a sampler hits one jit trace.
+    """
+    indptr = np.asarray(indptr, np.int64)
+    indices = np.asarray(indices)
+    weights = np.asarray(weights)
+    n = indptr.shape[0] - 1
+    num_cols = n if num_cols is None else int(num_cols)
+
+    idx, w, rows = _ell_buckets(indptr, indices, weights, buckets, block_rows,
+                                row_capacity)
+    t = None
+    if with_transpose:
+        t_ptr, t_ind, t_w = _transpose_csr(indptr, indices, weights, num_cols)
+        ti, tw, tr = _ell_buckets(t_ptr, t_ind, t_w, buckets, block_rows,
+                                  row_capacity)
+        t = ELLGraph(ti, tw, tr, num_rows=num_cols, num_cols=n)
+    return ELLGraph(idx, w, rows, num_rows=n, num_cols=num_cols, transpose=t)
+
+
+def fixed_row_capacity(num_rows: int, num_edges: int, buckets=(8, 32, 128),
+                       block_rows: int = 256) -> tuple:
+    """Worst-case per-bucket row counts for any graph with ≤ num_edges edges
+    over num_rows rows: each row emits ≤ 1 remainder chunk (any bucket) plus
+    full-kmax chunks (last bucket only, ≤ E/kmax in total)."""
+    caps = [max(_round_up(max(num_rows, 1), block_rows), block_rows)
+            for _ in buckets]
+    caps[-1] = max(_round_up(max(num_rows, 1) + num_edges // int(buckets[-1]),
+                             block_rows), block_rows)
+    return tuple(caps)
+
+
+def ell_from_coo(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+                 num_rows: int, *, buckets=(8, 32, 128),
+                 block_rows: int = 256, fixed_capacity: bool = True
+                 ) -> ELLGraph:
+    """Padded local COO (a PaddedSubgraph's edge list) -> square ELLGraph.
+
+    Aggregation semantics match ``models.gnn.segment_spmm``: out[dst] +=
+    w·h[src]; padded edges (w == 0) contribute nothing. With
+    ``fixed_capacity`` the bucket shapes depend only on (num_rows, E), so all
+    batches of a sampler share one jit trace.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    w = np.asarray(w, np.float32)
+    order = np.argsort(dst, kind="stable")
+    counts = np.bincount(dst, minlength=num_rows)
+    indptr = np.zeros(num_rows + 1, np.int64)
+    indptr[1:] = np.cumsum(counts)
+    caps = (fixed_row_capacity(num_rows, src.shape[0], buckets, block_rows)
+            if fixed_capacity else None)
+    return build_ell(indptr, src[order], w[order], buckets, block_rows,
+                     num_cols=num_rows, row_capacity=caps)
+
+
+# ------------------------------------------------------------ kernel wrappers
+def _bucketed_spmm_impl(g: ELLGraph, h: jax.Array, interpret: bool
+                        ) -> jax.Array:
     """out[i] = Σ_{j in N(i)} w_ij h[j] over all degree buckets."""
     n = g.num_rows
     d = h.shape[1]
     d_pad = _round_up(d, 128)
     hp = jnp.pad(h, ((0, 0), (0, d_pad - d))) if d_pad != d else h
-    out = jnp.zeros((n + 1, d_pad), h.dtype)
+    out = jnp.zeros((n + 1, d_pad), h.dtype)   # row n catches padding rows
     for idx, w, rows in zip(g.bucket_idx, g.bucket_w, g.bucket_rows):
-        part = ell_spmm(idx, w, hp, interpret=interpret)
-        out = out.at[rows].add(part, mode="drop")
+        part = ell_spmm(idx, w, hp, block_rows=_pick_block_rows(idx.shape[0]),
+                        interpret=interpret)
+        out = out.at[rows].add(part.astype(h.dtype), mode="drop")
     return out[:n, :d]
 
 
-def ell_aggregate_fn(g: ELLGraph, *, interpret: bool = True):
+def _zeros_cotangent(tree):
+    """Zero cotangents for a pytree with integer leaves (float0 for ints)."""
+    def z(x):
+        x = jnp.asarray(x)
+        if jnp.issubdtype(x.dtype, jnp.integer) or x.dtype == jnp.bool_:
+            return np.zeros(x.shape, jax.dtypes.float0)
+        return jnp.zeros_like(x)
+    return jax.tree.map(z, tree)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _bucketed_spmm_vjp(interpret: bool, g: ELLGraph, h: jax.Array):
+    return _bucketed_spmm_impl(g, h, interpret)
+
+
+def _bucketed_spmm_fwd(interpret, g, h):
+    return _bucketed_spmm_impl(g, h, interpret), (g, h)
+
+
+def _bucketed_spmm_bwd(interpret, res, ct):
+    g, h = res
+    if g.transpose is None:
+        raise ValueError(
+            "bucketed_spmm: gradient requested but the ELLGraph was built "
+            "with with_transpose=False; the SpMM VJP needs the bucketed Aᵀ")
+    dh = _bucketed_spmm_impl(g.transpose, ct, interpret)
+    # weight cotangent dw[i,k] = ⟨ct[rows[i]], h[idx[i,k]]⟩ (jnp gather; XLA
+    # DCEs it under jit when the caller only differentiates w.r.t. h, the
+    # LMC train-step case). Row `num_rows` of the padded ct zeroes the
+    # all-padding rows (rid == num_rows).
+    ctp = jnp.pad(ct, ((0, 1), (0, 0)))
+    dws = tuple(
+        jnp.einsum("rd,rkd->rk", jnp.take(ctp, rows, axis=0, mode="clip"),
+                   jnp.take(h, idx, axis=0, mode="clip")).astype(w.dtype)
+        for idx, w, rows in zip(g.bucket_idx, g.bucket_w, g.bucket_rows))
+    dg = dataclasses.replace(_zeros_cotangent(g), bucket_w=dws)
+    return dg, dh
+
+
+_bucketed_spmm_vjp.defvjp(_bucketed_spmm_fwd, _bucketed_spmm_bwd)
+
+
+def bucketed_spmm(g: ELLGraph, h: jax.Array, *,
+                  interpret: bool | None = None) -> jax.Array:
+    """Differentiable bucketed ELL SpMM: out = A h.
+
+    VJP: dh = Aᵀ(dout) through the transposed-bucket kernel; d(bucket_w) via
+    jnp gathers (padding slots get the would-be-edge gradient ct·h[0], which
+    is meaningless but never read back — ELL weights map to CSR entries only
+    where the builder placed real edges).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _bucketed_spmm_vjp(bool(interpret), g, h)
+
+
+def _compensate_impl(store, gids, beta, fresh, mask, interpret):
+    n, d = fresh.shape
+    d_pad = _round_up(d, 128)
+    block = 256 if n >= 256 else _round_up(max(n, 8), 8)
+    n_pad = _round_up(n, block)
+    sp = jnp.pad(store, ((0, 0), (0, d_pad - d))) if d_pad != d else store
+    fp = fresh
+    if d_pad != d or n_pad != n:
+        fp = jnp.pad(fresh, ((0, n_pad - n), (0, d_pad - d)))
+    pad1 = ((0, n_pad - n),)
+    gp = jnp.pad(gids, pad1) if n_pad != n else gids
+    bp = jnp.pad(beta, pad1) if n_pad != n else beta
+    mp = jnp.pad(mask, pad1) if n_pad != n else mask
+    out = lmc_compensate_kernel(sp, gp, bp, fp, mp, block_rows=block,
+                                interpret=interpret)
+    return out[:n, :d]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _lmc_compensate_vjp(interpret, store, gids, beta, fresh, mask):
+    return _compensate_impl(store, gids, beta, fresh, mask, interpret)
+
+
+def _compensate_fwd(interpret, store, gids, beta, fresh, mask):
+    out = _compensate_impl(store, gids, beta, fresh, mask, interpret)
+    return out, (store, gids, beta, fresh, mask)
+
+
+def _compensate_bwd(interpret, res, ct):
+    store, gids, beta, fresh, mask = res
+    hist = jnp.take(store, gids, axis=0, mode="clip")
+    d_store = jnp.zeros_like(store).at[gids].add(
+        ((mask * (1.0 - beta))[:, None] * ct).astype(store.dtype))
+    d_beta = jnp.sum(ct * mask[:, None] * (fresh - hist),
+                     axis=-1).astype(beta.dtype)
+    d_fresh = (ct * (mask * beta)[:, None]).astype(fresh.dtype)
+    d_mask = jnp.sum(ct * ((1.0 - beta)[:, None] * hist
+                           + beta[:, None] * fresh), axis=-1).astype(mask.dtype)
+    d_gids = np.zeros(gids.shape, jax.dtypes.float0)
+    return d_store, d_gids, d_beta, d_fresh, d_mask
+
+
+_lmc_compensate_vjp.defvjp(_compensate_fwd, _compensate_bwd)
+
+
+def lmc_compensate(store: jax.Array, gids: jax.Array, beta: jax.Array,
+                   fresh: jax.Array, mask: jax.Array, *,
+                   interpret: bool | None = None) -> jax.Array:
+    """ĥ = mask · [(1-β)·store[gid] + β·fresh]  (Eq. 9/12), differentiable.
+
+    store (M, D); gids/beta/mask (N,); fresh (N, D) -> (N, D). Arbitrary N/D
+    (padded internally to kernel tiles); VJP is exact against the jnp oracle,
+    including the scatter-add store cotangent.
+
+    Perf note: when D is not a multiple of 128 the *whole store* is padded to
+    the tile width on every call — keep hidden dims 128-aligned in production
+    (the pad is then a no-op). The compiled path additionally bounds the
+    store VMEM block (see lmc_compensate_kernel / ROADMAP: HBM-DMA
+    streaming); historical stores beyond that stay on the segment backend.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _lmc_compensate_vjp(bool(interpret), store, gids, beta, fresh, mask)
+
+
+def ell_aggregate_fn(g: ELLGraph, *, interpret: bool | None = None):
     """AggregateFn adapter for repro.models.gnn (ignores the COO edge list —
     the ELL graph already encodes the same adjacency)."""
     def aggregate(edges, h, num_rows):
@@ -100,5 +404,6 @@ def ell_aggregate_fn(g: ELLGraph, *, interpret: bool = True):
     return aggregate
 
 
-__all__ = ["ELLGraph", "build_ell", "bucketed_spmm", "ell_spmm",
-           "lmc_compensate", "ell_aggregate_fn", "ref"]
+__all__ = ["ELLGraph", "build_ell", "ell_from_coo", "fixed_row_capacity",
+           "bucketed_spmm", "ell_spmm", "lmc_compensate", "ell_aggregate_fn",
+           "default_interpret", "ref"]

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.dist.sharding import dp_axis_size, shard_act, shard_res
+from repro.dist.sharding import concat_rows, dp_axis_size, shard_act, shard_res
 from repro.models.layers import (attention, decode_attention, rms_norm, rope,
                                  swiglu, BF16)
 from repro.models.spec import PSpec
@@ -190,11 +190,15 @@ def mla_apply(p: dict, h: jax.Array, ctx: Ctx, cfg: ArchConfig) -> jax.Array:
                        "dp", None, "model", None)
     v = shard_act(jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"]),
                   "dp", None, "model", None)
-    k = jnp.concatenate(
+    # concat_rows (not jnp.concatenate): operands are (dp, -, model, -)
+    # sharded and jax 0.4.37 miscompiles sharded concatenate on multi-axis
+    # meshes — see repro.dist.sharding.concat_rows
+    mla_labels = ("dp", None, "model", None)
+    k = concat_rows(
         [k_nope, jnp.broadcast_to(k_rope[:, :, None],
                                   (*k_rope.shape[:2], cfg.n_heads, m.rope_head_dim))],
-        axis=-1)
-    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        axis=-1, labels=mla_labels)
+    q = concat_rows([q_nope, q_rope], axis=-1, labels=mla_labels)
     scale = 1.0 / np.sqrt(m.nope_head_dim + m.rope_head_dim)
     q = shard_act(q, "dp", None, "model", None)
     chunk = cfg.attn_chunk if h.shape[1] > 2 * cfg.attn_chunk else 0

@@ -10,8 +10,13 @@ message-passing backward pass (Eq. 11-13) with per-layer ``jax.vjp``:
 
 ``aux`` carries the edge list (local COO: src, dst, weight), raw features and
 H^0 (for GCNII's initial-residual term). Aggregation is a weighted
-segment-sum — the jnp oracle of the Pallas SpMM kernel (kernels/ref.py); the
-trainer can swap in the kernel via ``aggregate_fn``.
+segment-sum — the jnp oracle of the Pallas SpMM kernel (kernels/ref.py). Two
+ways to put the kernel on the hot path: bind ``aggregate=ell_aggregate_fn(g)``
+at construction (full-graph use), or populate ``aux.ell`` with the batch's
+``ELLGraph`` — when present, layers aggregate through the differentiable
+``kernels.bucketed_spmm`` (its custom VJP runs the transposed-adjacency SpMM,
+so the LMC per-layer ``jax.vjp`` calls stay on the kernel; DESIGN.md §3).
+``make_train_step(..., backend="ell")`` selects the latter.
 
 Supported: GCN (Kipf & Welling 2017), GCNII (Chen et al. 2020), GraphSAGE
 (Hamilton et al. 2017), GIN (Xu et al. 2019) — the families used by the paper
@@ -39,6 +44,7 @@ class LayerAux(NamedTuple):
     x: jax.Array          # (N, dx) raw features of the local rows
     h0: jax.Array         # (N, d) initial embedding (GCNII); zeros otherwise
     self_w: jax.Array     # (N,) self-loop weight 1/(deg+1) for GCN-normalized agg
+    ell: Optional[Any] = None  # kernels.ELLGraph: aggregate via bucketed_spmm
 
 
 def segment_spmm(edges: EdgeList, h: jax.Array, num_rows: int) -> jax.Array:
@@ -119,24 +125,32 @@ class GNN:
             return jax.nn.relu(x @ embed["w"] + embed["b"])
         return x  # H^0 = X for gcn/sage/gin
 
+    def _aggregate(self, aux: LayerAux, h: jax.Array, n: int) -> jax.Array:
+        """Route aggregation: Pallas ELL kernel when the batch carries an
+        ELLGraph (train-step ``backend="ell"``), else the bound AggregateFn."""
+        if aux.ell is not None:
+            from repro.kernels import bucketed_spmm
+            return bucketed_spmm(aux.ell, h)
+        return self.aggregate(aux.edges, h, n)
+
     def layer_apply(self, lp: dict, l: int, h_in: jax.Array, aux: LayerAux) -> jax.Array:
         """One message-passing layer over the local row set (batch + halo)."""
         n = h_in.shape[0]
         if self.arch == "gcn":
-            agg = self.aggregate(aux.edges, h_in, n) + aux.self_w[:, None] * h_in
+            agg = self._aggregate(aux, h_in, n) + aux.self_w[:, None] * h_in
             return jax.nn.relu(agg @ lp["w"] + lp["b"])
         if self.arch == "gcnii":
-            agg = self.aggregate(aux.edges, h_in, n) + aux.self_w[:, None] * h_in
+            agg = self._aggregate(aux, h_in, n) + aux.self_w[:, None] * h_in
             beta_l = float(np.log(self.lam / (l + 1) + 1.0))
             sup = (1 - self.alpha) * agg + self.alpha * aux.h0
             out = (1 - beta_l) * sup + beta_l * (sup @ lp["w"])
             return jax.nn.relu(out)
         if self.arch == "sage":
             deg = jax.ops.segment_sum(aux.edges.w, aux.edges.dst, num_segments=n)
-            agg = self.aggregate(aux.edges, h_in, n) / jnp.maximum(deg, 1e-9)[:, None]
+            agg = self._aggregate(aux, h_in, n) / jnp.maximum(deg, 1e-9)[:, None]
             return jax.nn.relu(h_in @ lp["w_self"] + agg @ lp["w_nbr"] + lp["b"])
         if self.arch == "gin":
-            agg = self.aggregate(aux.edges, h_in, n) + (1.0 + lp["eps"]) * h_in
+            agg = self._aggregate(aux, h_in, n) + (1.0 + lp["eps"]) * h_in
             hid = jax.nn.relu(agg @ lp["w1"] + lp["b1"])
             return jax.nn.relu(hid @ lp["w2"] + lp["b2"])
         raise ValueError(self.arch)

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.dist.sharding import shard_act, shard_res
+from repro.dist.sharding import concat_rows, shard_act, shard_res
 from repro.models import blocks as B
 from repro.models import ssm as S
 from repro.models.blocks import Ctx
@@ -278,8 +278,12 @@ class LM:
             # DeepSeek-V3 multi-token prediction: predict t+2 from (h_t, e_{t+1})
             mp = params["mtp"]
             nxt = embed_lookup(params["embed"], targets)
+            # concat_rows: h is (dp, model, -) residual-sharded; sharded
+            # concatenate miscompiles on jax 0.4.37 multi-axis meshes
             h2 = jnp.einsum("bsd,de->bse",
-                            jnp.concatenate([h, nxt], axis=-1), mp["proj"])
+                            concat_rows([h, nxt], axis=-1,
+                                        labels=("dp", "model", None)),
+                            mp["proj"])
             h2 = rms_norm(h2, mp["ln"], cfg.norm_eps)
             h2 = (B.mla_apply if cfg.mla else B.attn_apply)(mp["attn"], h2, ctx, cfg)
             h2 = B.mlp_apply(mp["mlp"], h2, cfg)

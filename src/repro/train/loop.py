@@ -10,6 +10,11 @@ Production behaviors implemented (and tested in tests/test_fault_tolerance.py):
     convergence assumptions (staleness is bounded by Thm 2's ρ-term — see
     DESIGN.md §4), which is what `straggler_policy="skip-store"` does;
   * deterministic resume: the sampler's bit-generator state rides along.
+
+``backend="ell"`` switches the jit'd step onto the Pallas bucketed-ELL
+SpMM/compensate kernels (compiled on TPU, interpreter fallback on CPU);
+batches are then built with their adjacency re-bucketed host-side
+(`to_device_batch(sg, backend="ell")`).
 """
 from __future__ import annotations
 
@@ -47,7 +52,8 @@ class GNNTrainer:
                  ckpt_every: int = 50, seed: int = 0,
                  failure_injector: Optional[FailureInjector] = None,
                  straggler_deadline: float = 4.0,
-                 straggler_policy: str = "skip-store"):
+                 straggler_policy: str = "skip-store",
+                 backend: str = "segment"):
         self.gnn = gnn
         self.method = method
         self.graph = graph
@@ -57,6 +63,7 @@ class GNNTrainer:
         self.failure_injector = failure_injector
         self.straggler_deadline = straggler_deadline
         self.straggler_policy = straggler_policy
+        self.backend = backend  # aggregation hot path: "segment" | "ell"
 
         self.params = gnn.init_params(jax.random.key(seed))
         pspec = jax.eval_shape(lambda: self.params)  # shapes only
@@ -66,7 +73,8 @@ class GNNTrainer:
         self.step_num = 0
         # no buffer donation: the straggler skip-store policy and elastic
         # rescale both need the pre-step store to stay alive
-        self._step = jax.jit(make_train_step(gnn, method, graph.num_nodes))
+        self._step = jax.jit(make_train_step(gnn, method, graph.num_nodes,
+                                             backend=backend))
         self._update = jax.jit(
             lambda g, s, p: optimizer.update(g, s, p, optimizer.lr))
         self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
@@ -122,7 +130,7 @@ class GNNTrainer:
     def _one_step(self) -> None:
         t0 = time.time()
         sg = self.sampler.sample()
-        batch = to_device_batch(sg)
+        batch = to_device_batch(sg, backend=self.backend)
         if self.failure_injector is not None:
             self.failure_injector.maybe_fail(self.step_num)
         loss, grads, new_store, metrics = self._step(
