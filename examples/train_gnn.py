@@ -33,6 +33,13 @@ def main():
                     help="aggregation hot path: jnp segment-sum or the Pallas "
                          "bucketed-ELL SpMM/compensate kernels (compiled on "
                          "TPU, interpreter fallback on CPU)")
+    ap.add_argument("--stream", default=None, action="store_true",
+                    help="force the HBM→VMEM double-buffered DMA gather in "
+                         "the ell-backend kernels (default: autodetect = "
+                         "streamed; required for full-graph stores on TPU)")
+    ap.add_argument("--no-stream", dest="stream", action="store_false",
+                    help="force the legacy resident VMEM gather blocks "
+                         "(small graphs only)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_gnn_ckpt")
     args = ap.parse_args()
 
@@ -51,7 +58,7 @@ def main():
                              edge_weight_mode=m.edge_weight_mode)
     tr = GNNTrainer(gnn, m, g, sampler, sgd(lr=0.2), seed=0,
                     ckpt_dir=args.ckpt_dir, ckpt_every=100,
-                    backend=args.backend)
+                    backend=args.backend, stream=args.stream)
     if tr.restore():
         print(f"resumed from checkpoint at step {tr.step_num}")
 

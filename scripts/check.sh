@@ -1,18 +1,67 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 test suite + the kernel perf tripwire.
+# CI gate: tier-1 test suite + the kernel perf tripwires.
 #   scripts/check.sh [extra pytest args...]
-# The spmm benchmark writes experiments/bench/BENCH_spmm.json and asserts the
+# The spmm/compensate benchmarks rewrite experiments/bench/BENCH_{spmm,
+# compensate}.json; fresh kernel-path timings are compared against the
+# *committed* baselines (snapshotted before the run) and the gate fails on a
+# >1.3x regression of the default (streamed) pallas kernel path, plus the
 # vectorized ELL builder's >=10x speedup over the legacy loop.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 python -m pytest -x -q "$@"
+
+# snapshot the *committed* baselines (HEAD, not the working tree — the
+# benches below rewrite the working-tree files, and ratcheting against the
+# previous run would let a slow <1.3x-per-run regression through)
+BASE_DIR=$(mktemp -d)
+trap 'rm -rf "$BASE_DIR"' EXIT
+for f in experiments/bench/BENCH_spmm.json experiments/bench/BENCH_compensate.json; do
+    git show "HEAD:$f" > "$BASE_DIR/$(basename "$f")" 2>/dev/null \
+        || rm -f "$BASE_DIR/$(basename "$f")"   # not committed yet: no gate
+done
+
 python -m benchmarks.run --fast --only spmm_kernel
-python - <<'EOF'
+python -m benchmarks.run --fast --only compensate
+
+BASELINE_DIR="$BASE_DIR" python - <<'EOF'
 import json
+import os
+from pathlib import Path
+
+TOL = 1.3   # fail on >1.3x slowdown of any kernel-path row
+base_dir = Path(os.environ["BASELINE_DIR"])
+
 rows = json.load(open("experiments/bench/BENCH_spmm.json"))["rows"]
 speedup = rows["build_ell_vectorized_50k"]["speedup_vs_loop"]
 assert speedup >= 10.0, f"vectorized build_ell only {speedup:.1f}x faster"
 print(f"check OK: build_ell vectorized {speedup:.1f}x over the loop")
+
+for name in ("BENCH_spmm.json", "BENCH_compensate.json"):
+    bpath = base_dir / name
+    if not bpath.exists():
+        print(f"check: no committed baseline for {name}; skipping tripwire")
+        continue
+    base = json.load(open(bpath))
+    fresh = json.load(open(f"experiments/bench/{name}"))
+    if base.get("backend") != fresh.get("backend"):
+        # interpret-vs-compiled timings are not comparable across machines
+        print(f"check: {name} baseline backend {base.get('backend')!r} != "
+              f"{fresh.get('backend')!r}; skipping tripwire")
+        continue
+    for key, row in fresh["rows"].items():
+        # gate the production kernel path (default_path rows); the legacy
+        # resident-block comparison rows are informational and too jittery
+        # under the interpreter to gate on
+        if not key.startswith("pallas_") or not row.get("default_path"):
+            continue
+        old = base["rows"].get(key)
+        if old is None or "us_per_call" not in row:
+            continue
+        ratio = row["us_per_call"] / max(old["us_per_call"], 1e-9)
+        assert ratio <= TOL, (
+            f"{name}:{key} regressed {ratio:.2f}x "
+            f"({old['us_per_call']:.0f}us -> {row['us_per_call']:.0f}us)")
+        print(f"check OK: {name}:{key} {ratio:.2f}x vs baseline")
 EOF

@@ -88,13 +88,16 @@ def _combine(mode: str, beta: jax.Array, hist: jax.Array, fresh: jax.Array,
 
 def _compensate(mode: str, backend: str, store_l: jax.Array,
                 halo_gids: jax.Array, beta1d: jax.Array, fresh: jax.Array,
-                mask1d: jax.Array) -> jax.Array:
+                mask1d: jax.Array, stream: Optional[bool] = None) -> jax.Array:
     """Halo compensation ĥ/V̂ (Eq. 9/12): gather the historical rows and
     convex-combine with the incomplete fresh values.
 
     backend="segment": jnp gather + lerp. backend="ell": one fused Pallas
     ``lmc_compensate`` call — every mode is the same kernel with an effective
     β (lmc: β, historical: 0, fresh: 1); "none" skips the gather entirely.
+    ``stream`` (default: autodetect) selects the HBM→VMEM DMA store gather —
+    the store is *full-graph* here, so the streamed path is what lets the
+    compiled kernel run at paper scale (DESIGN.md §3).
     """
     if mode == "none":
         return jnp.zeros_like(fresh)
@@ -102,13 +105,15 @@ def _compensate(mode: str, backend: str, store_l: jax.Array,
         beta_eff = {"lmc": beta1d,
                     "historical": jnp.zeros_like(beta1d),
                     "fresh": jnp.ones_like(beta1d)}[mode]
-        return lmc_compensate(store_l, halo_gids, beta_eff, fresh, mask1d)
+        return lmc_compensate(store_l, halo_gids, beta_eff, fresh, mask1d,
+                              stream=stream)
     hist = gather_rows(store_l, halo_gids)
     return _combine(mode, beta1d[:, None], hist, fresh, mask1d[:, None])
 
 
 def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int, *,
-                    backend: str = "segment") -> Callable:
+                    backend: str = "segment",
+                    stream: Optional[bool] = None) -> Callable:
     """Build ``step(params, store, batch, x_full, self_w_full)``.
 
     Returns ``(loss, grads, new_store, metrics)``. Pure; jit/pjit at call site
@@ -120,6 +125,11 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int, *,
     ``jax.vjp`` cotangent applications of Eqs. 11-13) and halo compensation
     through the fused ``lmc_compensate`` kernel. The batch must then carry the
     bucketed adjacency (``to_device_batch(sg, backend="ell")``).
+
+    ``stream`` (ell backend only; default autodetect = streamed) selects the
+    HBM→VMEM double-buffered DMA gather in both kernels — required for
+    full-graph historical stores on the compiled path; ``stream=False``
+    forces the legacy resident VMEM gather blocks.
     """
     method.validate()
     assert backend in AGG_BACKENDS, backend
@@ -141,7 +151,8 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int, *,
         edges = EdgeList(batch.edge_src, batch.edge_dst, batch.edge_w)
         h0_ext = gnn.embed_apply(params["embed"], x_ext)
         aux = LayerAux(edges=edges, x=x_ext, h0=h0_ext, self_w=self_w_ext,
-                       ell=batch.ell if backend == "ell" else None)
+                       ell=batch.ell if backend == "ell" else None,
+                       stream=stream)
 
         bmask = batch.batch_mask[:, None]
         hmask = batch.halo_mask[:, None]
@@ -156,7 +167,7 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int, *,
             h_bar_batch = h_out[:nb] * bmask
             h_hat_halo = _compensate(method.fwd_mode, backend, new_h[l],
                                      batch.halo_gids, batch.beta, h_out[nb:],
-                                     batch.halo_mask)
+                                     batch.halo_mask, stream)
             new_h = new_h.at[l].set(scatter_rows(
                 new_h[l], batch.batch_gids, batch.batch_mask, h_bar_batch, num_nodes))
             h_in = concat_rows([h_bar_batch, h_hat_halo], axis=0)
@@ -209,7 +220,7 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int, *,
                 V_bar_next = hgrad[:nb] * bmask
                 V_hat = _compensate(method.bwd_mode, backend, new_v[l - 1],
                                     batch.halo_gids, batch.beta, hgrad[nb:],
-                                    batch.halo_mask)
+                                    batch.halo_mask, stream)
                 new_v = new_v.at[l - 1].set(scatter_rows(
                     new_v[l - 1], batch.batch_gids, batch.batch_mask,
                     V_bar_next, num_nodes))

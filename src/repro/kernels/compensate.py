@@ -5,12 +5,26 @@ from the (node-sharded) historical store fused with the lerp and validity
 mask, so the historical row never round-trips through HBM twice.
 
 Kernel layout mirrors ell_spmm.py: the gather ids ride in as a scalar-prefetch
-operand (SMEM), a row loop copies the gathered store rows into a
-(block_rows, block_d) VMEM scratch, and the lerp+mask runs as one broadcast
-multiply-add over the whole tile (β and mask arrive as (N, 1) lane-broadcast
-columns). ``interpret=None`` autodetects compiled-vs-interpreted like
-ell_spmm. This module exposes the shape-aligned raw kernel call; the padded,
-differentiable production entry point is ``ops.lmc_compensate``.
+operand (SMEM) and the lerp+mask runs as one broadcast multiply-add over the
+whole tile (β and mask arrive as (N, 1) lane-broadcast columns). The gather
+itself has two strategies:
+
+  * ``stream=True`` (default): the store stays in **HBM** (``pltpu.ANY``) and
+    each grid step's (block_rows, block_d) gather arrives via per-row
+    HBM→VMEM ``pltpu.make_async_copy`` into a 2-slot VMEM scratch. The
+    pipeline runs across grid steps: step t's compute overlaps step t+1's
+    DMA (slot t % 2 computes while slot (t+1) % 2 fills). The store is
+    *full-graph* on the LMC train path, so this is the path that makes
+    ``backend="ell"`` compile at paper scale — the old resident block capped
+    the store at ~24k f32 rows/device.
+  * ``stream=False``: legacy resident ``(M, block_d)`` VMEM store block
+    (small stores only; past ~12 MiB per block Mosaic fails at compile time).
+
+``interpret=None`` / ``stream=None`` autodetect like ell_spmm (the
+interpreter emulates the DMA/semaphore protocol exactly, so CPU CI verifies
+the streamed path at M well past the old cap). This module exposes the
+shape-aligned raw kernel call; the padded, differentiable production entry
+point is ``ops.lmc_compensate``.
 """
 from __future__ import annotations
 
@@ -21,11 +35,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ell_spmm import default_interpret
+from repro.kernels.ell_spmm import default_interpret, default_stream
 
 
-def _comp_kernel(gid_ref, beta_ref, mask_ref, fresh_ref, store_ref, o_ref,
-                 gath_ref, *, block_rows: int):
+def _comp_resident_kernel(gid_ref, beta_ref, mask_ref, fresh_ref, store_ref,
+                          o_ref, gath_ref, *, block_rows: int):
     row0 = pl.program_id(0) * block_rows
 
     def gather_row(r, _):
@@ -38,34 +52,87 @@ def _comp_kernel(gid_ref, beta_ref, mask_ref, fresh_ref, store_ref, o_ref,
     o_ref[:] = mask_ref[:] * ((1.0 - b) * gath_ref[:] + b * fresh_ref[:])
 
 
+def _comp_stream_kernel(gid_ref, beta_ref, mask_ref, fresh_ref, store_ref,
+                        o_ref, gath_ref, sem_ref, *, block_rows: int,
+                        block_d: int, grid_j: int):
+    """Streaming body, pipelined across row/feature tiles.
+
+    store_ref lives in HBM (``pltpu.ANY``); gath_ref is a (2, bn, bd) VMEM
+    double buffer; sem_ref a (2,) DMA-semaphore array. Grid steps run
+    sequentially on a TPU core and scratch persists across them, so tile
+    t = i·J + j computes out of slot t % 2 while tile t+1's row copies fill
+    slot (t+1) % 2 — the gather DMA for the next tile overlaps this tile's
+    lerp. Tile 0 pays the only un-overlapped gather (warm-up).
+    """
+    t = pl.program_id(0) * grid_j + pl.program_id(1)
+    num_t = pl.num_programs(0) * grid_j
+
+    def tile(t_, slot, op):
+        """start()/wait() the bn row-copies of grid tile t_ into slot."""
+        i = jax.lax.div(t_, grid_j)
+        col0 = jax.lax.rem(t_, grid_j) * block_d
+
+        def row(r, _):
+            g = gid_ref[i * block_rows + r]
+            op(pltpu.make_async_copy(
+                store_ref.at[pl.ds(g, 1), pl.ds(col0, block_d)],
+                gath_ref.at[slot, pl.ds(r, 1), :],
+                sem_ref.at[slot]))
+            return 0
+
+        jax.lax.fori_loop(0, block_rows, row, 0)
+
+    @pl.when(t == 0)
+    def _():  # warm-up: the first tile's gather cannot overlap anything
+        tile(0, 0, lambda dma: dma.start())
+
+    @pl.when(t + 1 < num_t)
+    def _():  # overlap: next tile's DMA flies during this tile's lerp
+        tile(t + 1, jax.lax.rem(t + 1, 2), lambda dma: dma.start())
+
+    slot = jax.lax.rem(t, 2)
+    tile(t, slot, lambda dma: dma.wait())
+    b = beta_ref[:]          # (bn, 1) broadcast over lanes
+    hist = gath_ref[slot].astype(fresh_ref.dtype)
+    o_ref[:] = mask_ref[:] * ((1.0 - b) * hist + b * fresh_ref[:])
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_d",
-                                             "interpret"))
+                                             "interpret", "stream"))
 def lmc_compensate_kernel(store: jax.Array, gids: jax.Array, beta: jax.Array,
                           fresh: jax.Array, mask: jax.Array, *,
                           block_rows: int = 256, block_d: int = 128,
-                          interpret: bool | None = None) -> jax.Array:
+                          interpret: bool | None = None,
+                          stream: bool | None = None) -> jax.Array:
     """store (M, D); gids/beta/mask (N,); fresh (N, D) -> (N, D).
 
     Requires N % block_rows == 0 and D % block_d == 0 (``ops.lmc_compensate``
-    pads and adds the custom VJP).
+    pads and adds the custom VJP). ``stream=None`` autodetects to the
+    HBM→VMEM DMA gather — no VMEM bound on the store row count M;
+    ``stream=False`` forces the legacy resident store block (small M only).
     """
     if interpret is None:
         interpret = default_interpret()
+    if stream is None:
+        stream = default_stream()
     n, d = fresh.shape
     m = store.shape[0]
     assert n % block_rows == 0 and d % block_d == 0, (n, d)
-    if not interpret and m * block_d * store.dtype.itemsize > 12 * 2**20:
-        # the gather source rides as one (M, block_d) VMEM block: full-graph
-        # stores blow VMEM on the compiled path until HBM-DMA row streaming
-        # lands (ROADMAP). Shard/partition the store, or stay interpreted.
-        raise ValueError(
-            f"lmc_compensate: store block ({m}, {block_d}) "
-            f"{m * block_d * store.dtype.itemsize / 2**20:.0f} MiB exceeds "
-            "the compiled-path VMEM budget (12 MiB); see ROADMAP (HBM-DMA "
-            "store streaming)")
     grid = (n // block_rows, d // block_d)
     beta2 = beta.reshape(n, 1).astype(fresh.dtype)
     mask2 = mask.reshape(n, 1).astype(fresh.dtype)
+    if stream:
+        kernel = functools.partial(_comp_stream_kernel, block_rows=block_rows,
+                                   block_d=block_d, grid_j=grid[1])
+        store_spec = pl.BlockSpec(memory_space=pltpu.ANY)  # stays in HBM
+        # DMA is byte-exact: the double buffer must carry the store dtype
+        scratch = [pltpu.VMEM((2, block_rows, block_d), store.dtype),
+                   pltpu.SemaphoreType.DMA((2,))]
+    else:
+        kernel = functools.partial(_comp_resident_kernel,
+                                   block_rows=block_rows)
+        store_spec = pl.BlockSpec((m, block_d), lambda i, j, gid: (0, j))
+        scratch = [pltpu.VMEM((block_rows, block_d), fresh.dtype)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,  # gids -> SMEM
         grid=grid,
@@ -73,13 +140,13 @@ def lmc_compensate_kernel(store: jax.Array, gids: jax.Array, beta: jax.Array,
             pl.BlockSpec((block_rows, 1), lambda i, j, gid: (i, 0)),
             pl.BlockSpec((block_rows, 1), lambda i, j, gid: (i, 0)),
             pl.BlockSpec((block_rows, block_d), lambda i, j, gid: (i, j)),
-            pl.BlockSpec((m, block_d), lambda i, j, gid: (0, j)),
+            store_spec,
         ],
         out_specs=pl.BlockSpec((block_rows, block_d), lambda i, j, gid: (i, j)),
-        scratch_shapes=[pltpu.VMEM((block_rows, block_d), fresh.dtype)],
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
-        functools.partial(_comp_kernel, block_rows=block_rows),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, d), fresh.dtype),
         interpret=interpret,

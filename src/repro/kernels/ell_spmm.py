@@ -7,25 +7,38 @@ two, host-side degree bucketing bounds the padding waste), giving a dense
 blocked along D so a (block_rows, block_d) output tile accumulates K gathered
 neighbor planes at a time.
 
-Kernel layout (vectorized — no per-row scalar accumulation):
-  * the neighbor-index array rides in as a *scalar-prefetch* operand
-    (``pltpu.PrefetchScalarGridSpec``), so row indices are resolved from SMEM
-    before the VMEM gathers they drive;
-  * for each k < K the kernel copies the k-th neighbor row of every row in the
-    tile into a (block_rows, block_d) VMEM scratch via dynamic slices, then
-    accumulates ``w[:, k:k+1] * gathered`` as one broadcast multiply-add over
-    the whole tile — the VPU lanes stay full instead of reducing one (D,)
-    vector per row at a time.
+Two gather strategies share the accumulation layout (vectorized — no per-row
+scalar accumulation; broadcast multiply-add over the whole tile, f32
+accumulator, full VPU lanes):
 
-``interpret=None`` autodetects the backend: compiled Mosaic on TPU,
-interpreter fallback elsewhere (CPU containers cannot lower Mosaic kernels).
-All tile dims are multiples of (8, 128) for VREG/MXU layout.
+  * ``stream=True`` (default): the feature operand stays in **HBM**
+    (``pltpu.ANY`` memory space) and the kernel body issues per-row
+    HBM→VMEM ``pltpu.make_async_copy`` gathers, driven by the
+    scalar-prefetched SMEM indices, into a 2-slot ``(block_rows, block_d)``
+    VMEM scratch. Neighbor plane k+1's copies start before plane k's wait, so
+    the DMA for k+1 overlaps the multiply-add for k (double buffering). No
+    VMEM bound on the gather source M — this is what lets the compiled path
+    gather from full-graph stores (the old resident block capped M at ~24k
+    f32 rows/device).
+  * ``stream=False``: the legacy resident block — the whole ``(M, block_d)``
+    feature slab rides in as one VMEM block and rows are copied out of it with
+    dynamic slices. Cheaper for small sources revisited by many rows (one
+    block load per feature tile instead of N·K row DMAs) but bounded by VMEM:
+    forcing it with a source past ~12 MiB per block fails at Mosaic compile
+    time on TPU.
 
-VMEM budget per grid step (defaults): h block (M≤8192, 128) f32 = 4 MiB,
-w tile (256, K≤128) = 128 KiB, out tile + gather scratch (256, 128) ×2 =
-256 KiB; the full (N, K≤128) int32 index array lives in SMEM (scalar
-prefetch), which bounds practical N·K for the compiled path — the bucketed
-wrapper (ops.py) keeps per-call index arrays at mini-batch scale.
+``interpret=None`` / ``stream=None`` autodetect: compiled Mosaic on TPU,
+interpreter fallback elsewhere (CPU containers cannot lower Mosaic kernels);
+streaming everywhere (the interpreter emulates the DMA/semaphore protocol
+exactly, so CPU CI verifies the streamed path — including at M well past the
+old cap). All tile dims are multiples of (8, 128) for VREG/MXU layout.
+
+VMEM budget per grid step (defaults, streamed): 2-slot gather scratch
+(2, 256, 128) f32 = 256 KiB, w tile (256, K≤128) = 128 KiB, out tile + f32
+accumulator (256, 128) ×2 = 256 KiB — independent of M. The full (N, K≤128)
+int32 index array lives in SMEM (scalar prefetch), which bounds practical N·K
+for the compiled path — the bucketed wrapper (ops.py) keeps per-call index
+arrays at mini-batch scale.
 """
 from __future__ import annotations
 
@@ -42,9 +55,22 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _spmm_kernel(idx_ref, w_ref, h_ref, o_ref, gath_ref, acc_ref, *, K: int,
-                 block_rows: int):
-    """One (row-tile × feature-tile) step: gather-accumulate K neighbors.
+def default_stream() -> bool:
+    """True when the gather source should stream HBM→VMEM via per-row DMA.
+
+    Streaming is the production default on every backend: it removes the
+    resident-block VMEM cap on the gather source (full-graph historical
+    stores compile), and the interpreter emulates the DMA protocol exactly so
+    the same path is what CPU CI verifies. ``stream=False`` keeps the
+    resident-block kernel for small sources and for streamed-vs-resident
+    benchmarking.
+    """
+    return True
+
+
+def _spmm_resident_kernel(idx_ref, w_ref, h_ref, o_ref, gath_ref, acc_ref, *,
+                          K: int, block_rows: int):
+    """Resident-block body: gather rows out of a full (M, block_d) VMEM slab.
 
     idx_ref: full (N, K) int32 in SMEM (scalar prefetch); w_ref: (bn, K) VMEM
     tile; h_ref: (M, bd) VMEM feature block; gath_ref: (bn, bd) VMEM scratch;
@@ -68,42 +94,98 @@ def _spmm_kernel(idx_ref, w_ref, h_ref, o_ref, gath_ref, acc_ref, *, K: int,
     o_ref[:] = acc_ref[:].astype(o_ref.dtype)
 
 
+def _spmm_stream_kernel(idx_ref, w_ref, h_ref, o_ref, gath_ref, acc_ref,
+                        sem_ref, *, K: int, block_rows: int, block_d: int):
+    """Streaming body: per-row HBM→VMEM DMA gathers, double-buffered over k.
+
+    h_ref lives in HBM (``pltpu.ANY``); gath_ref is a (2, bn, bd) VMEM
+    double buffer; sem_ref a (2,) DMA-semaphore array, one per slot. Neighbor
+    plane k lands in slot k % 2: its copies are started one plane ahead
+    (while plane k-1's multiply-add runs) and waited right before use. Every
+    started copy is waited in the same grid step, so no DMA crosses grid-step
+    boundaries.
+    """
+    row0 = pl.program_id(0) * block_rows
+    col0 = pl.program_id(1) * block_d
+
+    def plane(k, slot, op):
+        """start()/wait() the bn row-copies of neighbor plane k into slot."""
+        def row(r, _):
+            j = idx_ref[row0 + r, k]
+            op(pltpu.make_async_copy(
+                h_ref.at[pl.ds(j, 1), pl.ds(col0, block_d)],
+                gath_ref.at[slot, pl.ds(r, 1), :],
+                sem_ref.at[slot]))
+            return 0
+
+        jax.lax.fori_loop(0, block_rows, row, 0)
+
+    acc_ref[:] = jnp.zeros_like(acc_ref)
+    plane(0, 0, lambda dma: dma.start())
+
+    def k_step(k, _):
+        slot = jax.lax.rem(k, 2)
+
+        @pl.when(k + 1 < K)
+        def _():  # overlap: plane k+1's DMA flies during plane k's compute
+            plane(k + 1, jax.lax.rem(k + 1, 2), lambda dma: dma.start())
+
+        plane(k, slot, lambda dma: dma.wait())
+        acc_ref[:] += (w_ref[:, pl.ds(k, 1)].astype(jnp.float32)
+                       * gath_ref[slot].astype(jnp.float32))
+        return 0
+
+    jax.lax.fori_loop(0, K, k_step, 0)
+    o_ref[:] = acc_ref[:].astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_d",
-                                             "interpret"))
+                                             "interpret", "stream"))
 def ell_spmm(nbr_idx: jax.Array, nbr_w: jax.Array, h: jax.Array, *,
              block_rows: int = 256, block_d: int = 128,
-             interpret: bool | None = None) -> jax.Array:
+             interpret: bool | None = None,
+             stream: bool | None = None) -> jax.Array:
     """out[i] = Σ_k w[i,k] · h[idx[i,k]]  via pl.pallas_call.
 
     nbr_idx/nbr_w: (N, K); h: (M, D). N must divide by block_rows and D by
     block_d (the ops.py wrapper pads). ``interpret=None`` autodetects:
-    compiled on TPU, interpreted elsewhere.
+    compiled on TPU, interpreted elsewhere. ``stream=None`` autodetects to
+    the HBM→VMEM DMA gather (no VMEM bound on M); ``stream=False`` forces the
+    legacy resident ``(M, block_d)`` VMEM block (small sources only).
     """
     if interpret is None:
         interpret = default_interpret()
+    if stream is None:
+        stream = default_stream()
     n, k = nbr_idx.shape
     m, d = h.shape
     assert n % block_rows == 0 and d % block_d == 0, (n, d)
-    if not interpret and m * block_d * h.dtype.itemsize > 12 * 2**20:
-        raise ValueError(
-            f"ell_spmm: feature block ({m}, {block_d}) "
-            f"{m * block_d * h.dtype.itemsize / 2**20:.0f} MiB exceeds the "
-            "compiled-path VMEM budget (12 MiB) — mini-batch-scale gather "
-            "sources only until HBM-DMA streaming lands (ROADMAP)")
     grid = (n // block_rows, d // block_d)
+    if stream:
+        kernel = functools.partial(_spmm_stream_kernel, K=k,
+                                   block_rows=block_rows, block_d=block_d)
+        h_spec = pl.BlockSpec(memory_space=pltpu.ANY)  # stays in HBM
+        scratch = [pltpu.VMEM((2, block_rows, block_d), h.dtype),
+                   pltpu.VMEM((block_rows, block_d), jnp.float32),
+                   pltpu.SemaphoreType.DMA((2,))]
+    else:
+        kernel = functools.partial(_spmm_resident_kernel, K=k,
+                                   block_rows=block_rows)
+        h_spec = pl.BlockSpec((m, block_d), lambda i, j, idx: (0, j))
+        scratch = [pltpu.VMEM((block_rows, block_d), h.dtype),
+                   pltpu.VMEM((block_rows, block_d), jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,  # nbr_idx -> SMEM, readable before DMA
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, k), lambda i, j, idx: (i, 0)),
-            pl.BlockSpec((m, block_d), lambda i, j, idx: (0, j)),
+            h_spec,
         ],
         out_specs=pl.BlockSpec((block_rows, block_d), lambda i, j, idx: (i, j)),
-        scratch_shapes=[pltpu.VMEM((block_rows, block_d), h.dtype),
-                        pltpu.VMEM((block_rows, block_d), jnp.float32)],
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
-        functools.partial(_spmm_kernel, K=k, block_rows=block_rows),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, d), h.dtype),
         interpret=interpret,

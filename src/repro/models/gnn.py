@@ -45,6 +45,7 @@ class LayerAux(NamedTuple):
     h0: jax.Array         # (N, d) initial embedding (GCNII); zeros otherwise
     self_w: jax.Array     # (N,) self-loop weight 1/(deg+1) for GCN-normalized agg
     ell: Optional[Any] = None  # kernels.ELLGraph: aggregate via bucketed_spmm
+    stream: Optional[bool] = None  # HBM→VMEM DMA gather knob (None: autodetect)
 
 
 def segment_spmm(edges: EdgeList, h: jax.Array, num_rows: int) -> jax.Array:
@@ -130,7 +131,7 @@ class GNN:
         ELLGraph (train-step ``backend="ell"``), else the bound AggregateFn."""
         if aux.ell is not None:
             from repro.kernels import bucketed_spmm
-            return bucketed_spmm(aux.ell, h)
+            return bucketed_spmm(aux.ell, h, stream=aux.stream)
         return self.aggregate(aux.edges, h, n)
 
     def layer_apply(self, lp: dict, l: int, h_in: jax.Array, aux: LayerAux) -> jax.Array:

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.dist.sharding import model_axis_size, shard_act
+from repro.dist.sharding import concat_rows, model_axis_size, shard_act
 
 BF16 = jnp.bfloat16
 NEG_INF = -1e30
@@ -38,7 +38,12 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
     sin = jnp.sin(ang)[..., None, :]
     x1, x2 = x[..., :half], x[..., half:]
-    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    # concat_rows (not jnp.concatenate): q/k arrive (dp, -, model, -)
+    # head-sharded and jax 0.4.37 miscompiles sharded concatenate on
+    # multi-axis meshes — see repro.dist.sharding.concat_rows
+    labels = ("dp",) + (None,) * (x.ndim - 3) + ("model", None)
+    out = concat_rows([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1,
+                      labels=labels)
     return out.astype(x.dtype)
 
 

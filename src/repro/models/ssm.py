@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.dist.sharding import shard_act, shard_res
+from repro.dist.sharding import concat_rows, shard_act, shard_res
 from repro.models.layers import rms_norm, BF16
 from repro.models.spec import PSpec
 
@@ -182,8 +182,10 @@ def mamba2_decode(p: dict, h: jax.Array, cache: dict, cfg: ArchConfig):
     H, P, N, G = d_in // s.head_dim, s.head_dim, s.d_state, s.n_groups
     x0 = rms_norm(h, p["ln"], cfg.norm_eps)
     z, conv_in, dt = _mamba_proj(p, x0, cfg)
-    hist = jnp.concatenate([cache["conv"],
-                            conv_in.astype(jnp.float32)], axis=1)  # (B,k,conv)
+    # concat_rows: the conv cache/step are (dp, -, model) sharded; sharded
+    # concatenate miscompiles on jax 0.4.37 multi-axis meshes
+    hist = concat_rows([cache["conv"], conv_in.astype(jnp.float32)],
+                       axis=1, labels=("dp", None, "model"))  # (B,k,conv)
     conv_out = jax.nn.silu(
         jnp.einsum("bkc,kc->bc", hist, p["conv_w"].astype(jnp.float32))
         + p["conv_b"].astype(jnp.float32))
@@ -242,10 +244,15 @@ def rwkv6_spec(cfg: ArchConfig) -> dict:
 
 
 def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
-    """x_{t-1} with optional carried last token (decode)."""
+    """x_{t-1} with optional carried last token (decode).
+
+    concat_rows (not jnp.concatenate): x is residual-sharded (dp, model, -)
+    and sharded concatenate miscompiles on jax 0.4.37 multi-axis meshes.
+    """
     if last is None:
         return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :x.shape[1]]
-    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1) \
+    return concat_rows([last[:, None], x[:, :-1]], axis=1,
+                       labels=("dp", "model", None)) \
         if x.shape[1] > 1 else last[:, None]
 
 

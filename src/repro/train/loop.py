@@ -53,7 +53,8 @@ class GNNTrainer:
                  failure_injector: Optional[FailureInjector] = None,
                  straggler_deadline: float = 4.0,
                  straggler_policy: str = "skip-store",
-                 backend: str = "segment"):
+                 backend: str = "segment",
+                 stream: Optional[bool] = None):
         self.gnn = gnn
         self.method = method
         self.graph = graph
@@ -64,6 +65,7 @@ class GNNTrainer:
         self.straggler_deadline = straggler_deadline
         self.straggler_policy = straggler_policy
         self.backend = backend  # aggregation hot path: "segment" | "ell"
+        self.stream = stream    # HBM→VMEM DMA gather knob (None: autodetect)
 
         self.params = gnn.init_params(jax.random.key(seed))
         pspec = jax.eval_shape(lambda: self.params)  # shapes only
@@ -74,7 +76,7 @@ class GNNTrainer:
         # no buffer donation: the straggler skip-store policy and elastic
         # rescale both need the pre-step store to stay alive
         self._step = jax.jit(make_train_step(gnn, method, graph.num_nodes,
-                                             backend=backend))
+                                             backend=backend, stream=stream))
         self._update = jax.jit(
             lambda g, s, p: optimizer.update(g, s, p, optimizer.lr))
         self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None

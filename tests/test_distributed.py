@@ -50,6 +50,56 @@ def test_distributed_lmc_step_matches_single_device():
     assert "SPMD-OK" in out
 
 
+def test_multipod_lmc_step_matches_single_device():
+    """The stacked LMC batch end-to-end on the 3-axis ("pod","data","model")
+    mesh: rows shard over the fused pod×data axis, stores/features over
+    (pod×data, model), all via spmd_shardings — numerics must match a single
+    device (DESIGN.md §4; ROADMAP multi-pod dry-run cell)."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.graph import make_sbm_dataset, partition_graph, ClusterSampler
+        from repro.core import make_train_step, init_history, from_graph, LMC
+        from repro.core.distributed import stack_batches, spmd_shardings
+        from repro.core.history import HistoricalState
+        from repro.launch.mesh import make_mesh
+        from repro.models import make_gnn
+
+        g = make_sbm_dataset("ppi-cpu", seed=3)
+        data = from_graph(g)
+        parts = partition_graph(g, 8, seed=0)
+        gnn = make_gnn("gcn", g.feature_dim, 32, g.num_classes, 2)
+        params = gnn.init_params(jax.random.key(0))
+        s = ClusterSampler(g, 8, 1, parts=parts, seed=1)
+        # pod x data = 4 row-parallel ways -> stack 4 per-device clusters
+        sgs = [s.build_batch(np.array([d])) for d in range(4)]
+        flat = stack_batches(sgs)
+        step = make_train_step(gnn, LMC, g.num_nodes)
+        store = init_history(2, g.num_nodes, 32)
+
+        l_ref, g_ref, st_ref, _ = jax.jit(step)(params, store, flat,
+                                                data.x, data.self_w)
+
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        bsh, ssh, xsh, swsh, psh = spmd_shardings(mesh)
+        store_sh = HistoricalState(h=ssh["h"], v=ssh["v"])
+        params_sh = jax.tree.map(lambda _: psh, params)
+        with mesh:
+            jstep = jax.jit(step, in_shardings=(params_sh, store_sh, bsh,
+                                                xsh, swsh))
+            l_3ax, g_3ax, st_3ax, _ = jstep(params, store, flat,
+                                            data.x, data.self_w)
+        assert abs(float(l_ref) - float(l_3ax)) < 1e-4, (l_ref, l_3ax)
+        for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_3ax)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-4)
+        # store updates (the halo-exchange collectives) must agree too
+        np.testing.assert_allclose(np.asarray(st_ref.h), np.asarray(st_3ax.h),
+                                   rtol=2e-3, atol=2e-4)
+        print("MULTIPOD-OK")
+    """)
+    assert "MULTIPOD-OK" in out
+
+
 def test_lm_train_step_spmd_small_mesh():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp

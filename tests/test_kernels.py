@@ -247,7 +247,9 @@ def test_interpret_autodetect():
 
 def test_compiled_path_lowers_and_compiles():
     """interpret=False must lower + compile (TPU-only: Mosaic cannot lower on
-    CPU — the autodetect covers that case, asserted above)."""
+    CPU — the autodetect covers that case, asserted above). ``stream=False``
+    pins the legacy resident-block path here; the streamed (default) compile
+    check lives in tests/test_streaming.py."""
     if jax.default_backend() != "tpu":
         pytest.skip("no TPU in this container; compiled Mosaic lowering "
                     "requires a TPU backend")
@@ -255,14 +257,16 @@ def test_compiled_path_lowers_and_compiles():
     idx = jnp.asarray(rng.integers(0, 512, (256, 8)).astype(np.int32))
     w = jnp.asarray(rng.random((256, 8)).astype(np.float32))
     h = jnp.asarray(rng.normal(size=(512, 128)).astype(np.float32))
-    jax.jit(lambda a, b, c: ell_spmm(a, b, c, interpret=False)).lower(
+    jax.jit(lambda a, b, c: ell_spmm(a, b, c, interpret=False,
+                                     stream=False)).lower(
         idx, w, h).compile()
     store = jnp.asarray(rng.normal(size=(512, 128)).astype(np.float32))
     gids = jnp.asarray(rng.integers(0, 512, 256).astype(np.int32))
     beta = jnp.asarray(rng.random(256).astype(np.float32))
     mask = jnp.asarray((rng.random(256) > 0.5).astype(np.float32))
     fresh = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
-    jax.jit(lambda *a: lmc_compensate(*a, interpret=False)).lower(
+    jax.jit(lambda *a: lmc_compensate(*a, interpret=False,
+                                      stream=False)).lower(
         store, gids, beta, fresh, mask).compile()
 
 
