@@ -25,7 +25,6 @@ Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
 Outputs experiments/roofline/<arch>_<shape>.json and a markdown table.
 """
 import argparse
-import dataclasses
 import json
 from pathlib import Path
 

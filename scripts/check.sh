@@ -1,6 +1,10 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 test suite + the kernel perf tripwires.
+# CI gate: static analysis + tier-1 test suite + the kernel perf tripwires.
 #   scripts/check.sh [extra pytest args...]
+# Gate 1 is `python -m repro.analysis src/` (DESIGN.md §8): the
+# kernel/sharding invariant rules (R001-R005) fail fast — before the test
+# suite or benchmarks spend minutes — on any unsuppressed finding, printing
+# the per-rule summary alongside the perf-tripwire output below.
 # The spmm/compensate benchmarks rewrite experiments/bench/BENCH_{spmm,
 # compensate}.json; fresh kernel-path timings are compared against the
 # *committed* baselines (snapshotted before the run) and the gate fails on a
@@ -9,6 +13,8 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+python -m repro.analysis src/
 
 python -m pytest -x -q "$@"
 

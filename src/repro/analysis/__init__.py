@@ -1,0 +1,36 @@
+"""repro.analysis — repo-specific static analysis for kernel/sharding invariants.
+
+The LMC convergence guarantee (Thm. 2) holds only if the compensation path
+computes exactly the gradients Eq. (9)/(12) prescribe, and in this repo those
+semantics live in hand-written Pallas custom-VJP kernels guarded by
+conventions a reviewer has to re-verify on every PR: concats must route
+through ``concat_rows`` (the jax 0.4.37 sharded-concatenate miscompile,
+DESIGN.md §4), streamed DMA kernels must pair every ``make_async_copy`` start
+with a wait on the same semaphore, resident VMEM blocks must fit the ~12 MiB
+Mosaic budget, and custom-VJP fwd/bwd signatures must agree on residual and
+cotangent arity. This package turns those manual audits into machine-checked
+rules (DESIGN.md §8):
+
+  R001 sharded-concat   raw jnp.concatenate/stack outside dist/sharding.py
+  R002 pallas-dma       unpaired/unconsumed async-copy starts and waits,
+                        slot-count vs DMA-semaphore-shape mismatches
+  R003 vmem-budget      statically estimated per-grid-step VMEM over budget,
+                        statically unbounded (runtime-shaped) VMEM blocks
+  R004 jit-hazards      host syncs + Python branches on traced values inside
+                        jitted / custom-VJP / kernel bodies
+  R005 custom-vjp-arity fwd residual tuple vs bwd unpack arity, fwd/bwd
+                        parameter counts vs nondiff_argnums, bwd return arity
+
+Known-good exceptions are annotated in source with
+``# lint: ok(R00x[,R00y]) <reason>`` pragmas — the reason is mandatory; a
+reasonless pragma does not suppress and is itself reported (R000). The pass
+runs self-hosted over ``src/`` as a tier-1 test (zero unsuppressed findings)
+and as the first gate in ``scripts/check.sh``:
+
+    python -m repro.analysis src/ [--rule R00x] [--json]
+"""
+from repro.analysis.engine import (Finding, Rule, all_rules, analyze_source,
+                                   run_analysis, summarize)
+
+__all__ = ["Finding", "Rule", "all_rules", "analyze_source", "run_analysis",
+           "summarize"]

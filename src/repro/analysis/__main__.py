@@ -1,0 +1,61 @@
+"""CLI: `python -m repro.analysis [paths] [--rule R00x] [--json]`.
+
+Exit status is the contract `scripts/check.sh` builds on: 0 when every
+finding is pragma-suppressed, 1 when any unsuppressed finding remains,
+2 on usage errors. Findings print grep-style (`path:line:col: R00x msg`)
+followed by a per-rule summary block; `--json` replaces the human output
+with a machine-readable dump (summary still goes to stderr).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.engine import all_rules, run_analysis, summarize
+
+
+def main(argv=None) -> int:
+    rules = all_rules()
+    known = {r.id for r in rules}
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis: kernel/sharding "
+                    "invariant checks (R001-R005, DESIGN.md §8)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to analyze (default: src)")
+    ap.add_argument("--rule", action="append", metavar="R00x",
+                    help="run only the given rule id (repeatable)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON on stdout")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print pragma-suppressed findings")
+    args = ap.parse_args(argv)
+
+    if args.rule:
+        bad = [r for r in args.rule if r not in known]
+        if bad:
+            print(f"unknown rule id(s): {', '.join(bad)} "
+                  f"(known: {', '.join(sorted(known))})", file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.id in set(args.rule)]
+
+    findings = run_analysis(args.paths or ["src"], rules)
+    live = [f for f in findings if not f.suppressed]
+
+    if args.json:
+        json.dump([f.to_json() for f in findings], sys.stdout, indent=2)
+        print()
+        print(summarize(findings, rules), file=sys.stderr)
+    else:
+        shown = findings if args.show_suppressed else live
+        for f in shown:
+            print(f.format())
+        if shown:
+            print()
+        print(summarize(findings, rules))
+    return 1 if live else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""R001: raw jnp concatenates/stacks outside the sharding subsystem.
+
+jax 0.4.37's partitioner miscompiles `concatenate` whenever an operand or the
+result is sharded on a multi-axis mesh — the output comes back summed over the
+unrelated mesh axes (observed on the (data, model) grid; DESIGN.md §4, PR 1).
+`repro.dist.sharding.concat_rows` expresses the concat as dynamic-update
+slices into a zeros buffer with the result sharding pinned, and `stack` &
+friends lower to `concatenate`, so every such call outside `dist/sharding.py`
+must either route through `concat_rows` or carry a pragma proving the
+operands are replicated on every mesh (e.g. an off-mesh-only code path).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis import astutils
+from repro.analysis.engine import ModuleInfo, RawFinding, Rule
+
+# Everything that lowers to (or wraps) a lax.concatenate. `append`/`block`
+# are included because they concatenate too; numpy (host-side) calls are fine.
+_BANNED = {
+    "jax.numpy." + fn
+    for fn in ("concatenate", "stack", "hstack", "vstack", "dstack",
+               "column_stack", "row_stack", "append", "block")
+} | {"jax.lax.concatenate"}
+
+# The one module allowed to call jnp.concatenate: concat_rows' own off-mesh
+# fallback (where the concat is provably unsharded).
+_ALLOWED_SUFFIXES = ("dist/sharding.py",)
+
+
+class ShardedConcatRule(Rule):
+    id = "R001"
+    name = "sharded-concat"
+    doc = __doc__
+
+    def check(self, mod: ModuleInfo) -> Iterator[RawFinding]:
+        path = mod.path.replace("\\", "/")
+        if path.endswith(_ALLOWED_SUFFIXES):
+            return
+        for node in ast.walk(mod.tree):
+            qn = astutils.call_qualname(node, mod.aliases)
+            if qn in _BANNED:
+                short = qn.split(".")[-1]
+                yield node, (
+                    f"raw `{short}` outside dist/sharding.py: jax 0.4.37 "
+                    "miscompiles sharded concatenates (result summed over "
+                    "unrelated mesh axes). Route through "
+                    "repro.dist.sharding.concat_rows, or annotate with "
+                    "`# lint: ok(R001) <why operands are replicated>`")

@@ -1,0 +1,192 @@
+"""R004: host syncs and Python control flow on traced values in traced code.
+
+The LMC train step, both custom-VJP pairs, and the kernel bodies are traced
+exactly once and replayed; a `.item()` / `np.asarray(tracer)` inside them
+forces a device sync per call (silently killing the async dispatch the
+streamed kernels exist for), and a Python `if` on a traced value either
+raises a ConcretizationTypeError at trace time or — worse — bakes one branch
+into the compiled program for every input. This rule walks *traced scopes*:
+
+  * functions decorated with `jax.jit` (directly or via
+    `functools.partial(jax.jit, static_argnames=…)`),
+  * the custom-VJP trio — `@jax.custom_vjp` primals and both functions
+    registered through `X.defvjp(fwd, bwd)`,
+  * Pallas kernel bodies — `functools.partial(<kernel_fn>, …)` targets in
+    modules that call `pl.pallas_call`,
+
+plus everything nested inside them, and flags `.item()`, `np.asarray` /
+`np.array` / `jax.device_get` conversions, `float/int/bool(<param>)` casts,
+and `if`/`while` tests referencing non-static parameters. Branches on
+`static_argnames` parameters and `is None` pytree-structure checks are
+trace-time constants and are exempt, as are `.shape`/`.ndim`/`.dtype`/`len()`
+accesses (static under tracing).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis import astutils
+from repro.analysis.engine import ModuleInfo, RawFinding, Rule
+
+_JIT = ("jax.jit", "jax.pjit", "jax.experimental.pjit.pjit")
+_CUSTOM_GRAD = ("jax.custom_vjp", "jax.custom_jvp")
+_HOST_CONVERSIONS = ("numpy.asarray", "numpy.array", "jax.device_get")
+_PALLAS_CALL = ("jax.experimental.pallas.pallas_call",)
+_STATIC_ATTRS = ("shape", "ndim", "dtype", "size")
+_CASTS = ("float", "int", "bool")
+
+
+def _static_argnames(dec_call: Optional[ast.Call]) -> set:
+    names: set = set()
+    if dec_call is not None:
+        for kw in dec_call.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                vals = astutils.str_elements(kw.value)
+                if vals:
+                    names.update(vals)
+    return names
+
+
+def _nondiff_argnums(dec_call: Optional[ast.Call]) -> list[int]:
+    if dec_call is not None:
+        for kw in dec_call.keywords:
+            if kw.arg == "nondiff_argnums":
+                dims = astutils.const_eval_dims(kw.value, {})
+                if dims and all(d is not None for d in dims):
+                    return dims
+    return []
+
+
+def _params_at(func: ast.FunctionDef, idxs: list[int]) -> set:
+    params = astutils.param_names(func)
+    return {params[i] for i in idxs if 0 <= i < len(params)}
+
+
+def _traced_roots(mod: ModuleInfo) -> dict[ast.FunctionDef, set]:
+    """Traced top-of-scope functions -> their static parameter names."""
+    roots: dict[ast.FunctionDef, set] = {}
+    funcs = {f.name: f for f in astutils.walk_functions(mod.tree)}
+
+    nondiff: dict[str, list[int]] = {}   # primal name -> nondiff positions
+    for func in funcs.values():
+        for qn, call in astutils.decorator_info(func, mod.aliases):
+            if qn in _JIT:
+                roots.setdefault(func, set()).update(_static_argnames(call))
+            elif qn in _CUSTOM_GRAD:
+                idxs = _nondiff_argnums(call)
+                nondiff[func.name] = idxs
+                roots.setdefault(func, set()).update(_params_at(func, idxs))
+
+    # functions registered as fwd/bwd via X.defvjp(fwd, bwd): the primal's
+    # nondiff positions are trace-time constants in fwd (same signature) and
+    # arrive as the leading params of bwd
+    has_pallas = False
+    for node in ast.walk(mod.tree):
+        qn = astutils.call_qualname(node, mod.aliases)
+        if qn in _PALLAS_CALL:
+            has_pallas = True
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("defvjp", "defjvp")
+                and isinstance(node.func.value, ast.Name)):
+            idxs = nondiff.get(node.func.value.id, [])
+            for k, arg in enumerate(node.args):
+                if isinstance(arg, ast.Name) and arg.id in funcs:
+                    f = funcs[arg.id]
+                    pos = idxs if k == 0 else list(range(len(idxs)))
+                    roots.setdefault(f, set()).update(_params_at(f, pos))
+
+    # kernel bodies: functools.partial(<local fn>, ...) in a pallas module.
+    # The partialed statics are keywords of the partial call itself, so the
+    # kernel's own keyword-only params bound there are trace-time constants.
+    if has_pallas:
+        for node in ast.walk(mod.tree):
+            if (astutils.call_qualname(node, mod.aliases) == "functools.partial"
+                    and node.args and isinstance(node.args[0], ast.Name)
+                    and node.args[0].id in funcs):
+                kernel = funcs[node.args[0].id]
+                statics = {kw.arg for kw in node.keywords if kw.arg}
+                roots.setdefault(kernel, set()).update(statics)
+    return roots
+
+
+def _test_hazard_names(test: ast.AST, nonstatic: set) -> list[ast.Name]:
+    """Non-static parameter Names the branch test actually traces.
+
+    `x is None` / `x is not None` compares check pytree *structure* (static),
+    and `.shape`/`.ndim`/`.dtype`/`len()` are static under tracing — names
+    used only that way are exempt.
+    """
+    if isinstance(test, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return []
+    exempt: set = set()
+    for n in ast.walk(test):
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            for sub in ast.walk(n.value):
+                exempt.add(id(sub))
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                and n.func.id in ("len", "isinstance")):
+            for arg in n.args:
+                for sub in ast.walk(arg):
+                    exempt.add(id(sub))
+    return [n for n in ast.walk(test)
+            if isinstance(n, ast.Name) and n.id in nonstatic
+            and id(n) not in exempt]
+
+
+class JitHazardRule(Rule):
+    id = "R004"
+    name = "jit-hazards"
+    doc = __doc__
+
+    def check(self, mod: ModuleInfo) -> Iterator[RawFinding]:
+        for root, statics in _traced_roots(mod).items():
+            nonstatic = {p for p in astutils.param_names(root)
+                         if p not in statics}
+            # nested defs: their own params are local trace values too,
+            # minus names that shadow a static (partial-bound) one
+            for func in [root, *[f for f in astutils.walk_functions(root)
+                                 if f is not root]]:
+                if func is not root:
+                    nonstatic |= {p for p in astutils.param_names(func)
+                                  if p not in statics}
+            yield from self._check_scope(mod, root, nonstatic)
+
+    def _check_scope(self, mod: ModuleInfo, root: ast.FunctionDef,
+                     nonstatic: set) -> Iterator[RawFinding]:
+        for node in ast.walk(root):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args):
+                yield node, ("`.item()` inside a traced scope forces a "
+                             "host sync per call (or fails to trace) — "
+                             "keep the value on device or hoist it out of "
+                             f"`{root.name}`")
+                continue
+            qn = astutils.call_qualname(node, mod.aliases)
+            if qn in _HOST_CONVERSIONS:
+                yield node, (f"`{qn}` inside traced `{root.name}` pulls the "
+                             "array to host memory — use jnp, or move the "
+                             "conversion outside the jitted scope")
+                continue
+            if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                    and node.func.id in _CASTS and len(node.args) == 1
+                    and isinstance(node.args[0], ast.Name)
+                    and node.args[0].id in nonstatic):
+                yield node, (f"`{node.func.id}({node.args[0].id})` on a "
+                             f"traced parameter of `{root.name}` "
+                             "concretizes the tracer (host sync / trace "
+                             "error)")
+                continue
+            if isinstance(node, (ast.If, ast.While)):
+                hazards = _test_hazard_names(node.test, nonstatic)
+                if hazards:
+                    names = ", ".join(sorted({n.id for n in hazards}))
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield node, (
+                        f"Python `{kind}` on traced value(s) `{names}` "
+                        f"inside `{root.name}` — tracing bakes in one "
+                        "branch (or raises ConcretizationTypeError); use "
+                        "`jnp.where`/`lax.cond`, or mark the argument "
+                        "static")

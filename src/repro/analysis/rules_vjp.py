@@ -1,0 +1,173 @@
+"""R005: fwd/bwd signature and residual-arity consistency for custom VJPs.
+
+Every aggregation gradient in this repo flows through hand-written
+`jax.custom_vjp` pairs (kernels/ops.py, models/layers.py, models/blocks.py),
+and jax checks almost none of the contract statically: a bwd returning the
+wrong number of cotangents, a fwd whose residual tuple got a new element
+while the bwd unpack didn't, or a drifted `nondiff_argnums` all surface as
+cryptic tracer errors at first differentiation — or worse, as a silently
+dropped gradient when a `None` lands in the wrong cotangent slot, which for
+the LMC compensation path means Thm. 2's convergence guarantee quietly no
+longer applies. For each `X.defvjp(fwd, bwd)` whose pieces are resolvable in
+the module, with N = len(nondiff_argnums) (leading positions only — jax
+passes those values positionally to both fwd and bwd):
+
+  * fwd takes exactly as many parameters as the primal;
+  * bwd takes exactly N + 2 parameters (nondiffs…, residuals, cotangent);
+  * fwd returns a 2-tuple `(out, residuals)` wherever its return is a
+    literal tuple;
+  * when fwd's residual is a literal tuple of R elements, every tuple
+    unpacking of bwd's residual parameter has exactly R targets;
+  * bwd's literal tuple returns have primal_arity − N elements (one
+    cotangent per differentiable primal argument).
+
+Computed returns/unpacks (`return helper(...)`) are skipped, not guessed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis import astutils
+from repro.analysis.engine import ModuleInfo, RawFinding, Rule
+
+_CUSTOM_VJP = ("jax.custom_vjp",)
+
+
+def _literal_tuple_len(node: Optional[ast.AST]) -> Optional[int]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return None
+
+
+def _returns(func: ast.FunctionDef) -> list[ast.Return]:
+    """Return statements belonging to `func` itself (not nested defs)."""
+    out = []
+    stack = list(func.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, astutils.FunctionLike):
+            continue
+        if isinstance(node, ast.Return):
+            out.append(node)
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+class CustomVjpArityRule(Rule):
+    id = "R005"
+    name = "custom-vjp-arity"
+    doc = __doc__
+
+    def check(self, mod: ModuleInfo) -> Iterator[RawFinding]:
+        funcs = {f.name: f for f in astutils.walk_functions(mod.tree)}
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "defvjp"
+                    and isinstance(node.func.value, ast.Name)
+                    and len(node.args) == 2):
+                continue
+            primal = funcs.get(node.func.value.id)
+            if primal is None or not self._is_custom_vjp(primal, mod):
+                continue
+            fwd = (funcs.get(node.args[0].id)
+                   if isinstance(node.args[0], ast.Name) else None)
+            bwd = (funcs.get(node.args[1].id)
+                   if isinstance(node.args[1], ast.Name) else None)
+            yield from self._check_trio(mod, node, primal, fwd, bwd)
+
+    def _is_custom_vjp(self, func: ast.FunctionDef, mod: ModuleInfo) -> bool:
+        return any(qn in _CUSTOM_VJP
+                   for qn, _ in astutils.decorator_info(func, mod.aliases))
+
+    def _nondiff(self, func: ast.FunctionDef, mod: ModuleInfo
+                 ) -> Optional[list[int]]:
+        for qn, call in astutils.decorator_info(func, mod.aliases):
+            if qn in _CUSTOM_VJP and call is not None:
+                for kw in call.keywords:
+                    if kw.arg == "nondiff_argnums":
+                        dims = astutils.const_eval_dims(kw.value, {})
+                        if dims is None or any(d is None for d in dims):
+                            return None   # not statically resolvable
+                        return dims
+        return []
+
+    def _check_trio(self, mod, defvjp_node, primal, fwd, bwd
+                    ) -> Iterator[RawFinding]:
+        idxs = self._nondiff(primal, mod)
+        if idxs is None:
+            return
+        n_nondiff = len(idxs)
+        if idxs != list(range(n_nondiff)):
+            # non-leading nondiffs reorder jax's calling convention in ways
+            # this rule doesn't model; demand the simple layout instead
+            yield defvjp_node, (
+                f"`{primal.name}` has non-leading nondiff_argnums {idxs}; "
+                "use leading positions (0..N-1) so fwd/bwd arity is "
+                "auditable")
+            return
+        a = primal.args
+        if a.vararg or a.kwarg:
+            return   # *args primals: arity not statically checkable
+        n_primal = len(astutils.param_names(primal))
+
+        if fwd is not None and not fwd.args.vararg:
+            n_fwd = len(astutils.param_names(fwd))
+            if n_fwd != n_primal:
+                yield fwd, (
+                    f"fwd `{fwd.name}` takes {n_fwd} parameter(s) but the "
+                    f"primal `{primal.name}` takes {n_primal} — jax calls "
+                    "fwd with exactly the primal arguments")
+            for ret in _returns(fwd):
+                rlen = _literal_tuple_len(ret.value)
+                if rlen is not None and rlen != 2:
+                    yield ret, (
+                        f"fwd `{fwd.name}` must return `(out, residuals)`; "
+                        f"this return has {rlen} element(s)")
+
+        if bwd is not None and not bwd.args.vararg:
+            n_bwd = len(astutils.param_names(bwd))
+            want = n_nondiff + 2
+            if n_bwd != want:
+                yield bwd, (
+                    f"bwd `{bwd.name}` takes {n_bwd} parameter(s), expected "
+                    f"{want} ({n_nondiff} nondiff + residuals + cotangent) "
+                    f"for `{primal.name}`")
+            want_ct = n_primal - n_nondiff
+            for ret in _returns(bwd):
+                rlen = _literal_tuple_len(ret.value)
+                if rlen is not None and rlen != want_ct:
+                    yield ret, (
+                        f"bwd `{bwd.name}` returns {rlen} cotangent(s), "
+                        f"expected {want_ct} (one per differentiable "
+                        f"argument of `{primal.name}`)")
+
+        if fwd is not None and bwd is not None:
+            yield from self._check_residuals(fwd, bwd, n_nondiff)
+
+    def _check_residuals(self, fwd, bwd, n_nondiff) -> Iterator[RawFinding]:
+        res_lens = set()
+        for ret in _returns(fwd):
+            if _literal_tuple_len(ret.value) == 2:
+                rl = _literal_tuple_len(ret.value.elts[1])
+                if rl is not None:
+                    res_lens.add(rl)
+        bwd_params = astutils.param_names(bwd)
+        if len(res_lens) != 1 or len(bwd_params) < n_nondiff + 2:
+            return
+        res_len = res_lens.pop()
+        res_name = bwd_params[n_nondiff]
+        for node in ast.walk(bwd):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            tgt = node.targets[0]
+            if (isinstance(tgt, (ast.Tuple, ast.List))
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == res_name):
+                if len(tgt.elts) != res_len:
+                    yield node, (
+                        f"bwd `{bwd.name}` unpacks {len(tgt.elts)} "
+                        f"residual(s) from `{res_name}` but fwd "
+                        f"`{fwd.name}` saves {res_len} — the residual "
+                        "tuple and this unpack drifted apart")

@@ -18,7 +18,6 @@ from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.history import HistoricalState, gather_rows, scatter_rows
 from repro.core.methods import MBMethod

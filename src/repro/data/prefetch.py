@@ -3,37 +3,105 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator
+from typing import Iterator
+
+
+class _Done:
+    """Private end-of-stream sentinel (unique object, never yielded by a
+    source — unlike e.g. the StopIteration class itself)."""
+
+
+class _Raised:
+    """Wraps an exception raised inside the worker for re-raise in the
+    consumer thread."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
 
 
 class Prefetcher:
     """Background-thread prefetch with a bounded buffer (double buffering
-    by default). `close()` (or GC) stops the worker."""
+    by default).
+
+    * Items are yielded in source order; at most ``depth`` batches are ever
+      buffered ahead of the consumer (bounded lookahead, so host memory for
+      batch construction stays O(depth)).
+    * An exception raised by the source propagates to the consumer from
+      ``__next__`` — after all items produced before it have been consumed.
+    * ``close()`` stops the worker thread promptly even when it is blocked
+      in a full-queue ``put`` and joins it; it is idempotent and is also
+      called on GC. Iterating after ``close()`` raises ``StopIteration``.
+    """
+
+    # worker wakes up at this period to notice close() while blocked on a
+    # full queue; latency of close(), not of the data path
+    _PUT_POLL_S = 0.05
 
     def __init__(self, source: Iterator, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
         self.source = source
         self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._exhausted = False
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
+    def _put(self, item) -> bool:
+        """Blocking put that aborts (returns False) once close() is called."""
+        while not self._stop.is_set():
+            try:
+                self.q.put(item, timeout=self._PUT_POLL_S)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _worker(self) -> None:
         try:
             for item in self.source:
-                if self._stop.is_set():
+                if not self._put(item):
                     return
-                self.q.put(item)
-        finally:
-            self.q.put(StopIteration)
+        except BaseException as exc:  # noqa: BLE001 — re-raised in consumer
+            self._put(_Raised(exc))
+            return
+        self._put(_Done)
 
     def __iter__(self):
         return self
 
     def __next__(self):
-        item = self.q.get()
-        if item is StopIteration:
+        if self._exhausted:
             raise StopIteration
+        while True:
+            if self._stop.is_set():
+                raise StopIteration
+            try:
+                item = self.q.get(timeout=self._PUT_POLL_S)
+                break
+            except queue.Empty:
+                continue
+        if item is _Done:
+            self._exhausted = True
+            raise StopIteration
+        if isinstance(item, _Raised):
+            self._exhausted = True
+            raise item.exc
         return item
 
     def close(self) -> None:
         self._stop.set()
+        # drain so a worker blocked mid-put sees _stop on its next poll and
+        # the queue's buffered batches are released promptly
+        while True:
+            try:
+                self.q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

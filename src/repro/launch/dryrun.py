@@ -23,7 +23,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import numpy as np
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
@@ -149,8 +148,6 @@ def run_gnn_cell(*, multi_pod: bool, verbose: bool = True) -> dict:
     """Dry-run the paper's own workload: the distributed LMC train step
     (one cluster per data-parallel device, halo compensation via the sharded
     historical stores)."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
     from repro.core import make_train_step, LMC
     from repro.core.distributed import spmd_shardings
     from repro.core.lmc import Batch

@@ -6,7 +6,6 @@ examples (real arrays). One code path builds both: `input_specs` returns
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Optional
 
 import jax

@@ -12,7 +12,6 @@ DESIGN.md §7.5); MLA caches stay compressed (rank 512+64).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple
 
 import jax

@@ -9,7 +9,6 @@ Every LM block declares its parameters as a tree of :class:`PSpec` leaves
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

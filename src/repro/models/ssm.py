@@ -10,11 +10,9 @@ FLOP-dominant work is MXU matmuls outside any `lax.scan`:
 """
 from __future__ import annotations
 
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.dist.sharding import concat_rows, shard_act, shard_res
@@ -57,7 +55,11 @@ def _mamba_proj(p: dict, x: jax.Array, cfg: ArchConfig):
     Cc = zxbcdt[..., 2 * d_in + gn:2 * d_in + 2 * gn]
     dt = zxbcdt[..., 2 * d_in + 2 * gn:]
     assert dt.shape[-1] == n_heads
-    return z, jnp.concatenate([xin, Bc, Cc], axis=-1), dt
+    # concat_rows (not jnp.concatenate): xin/Bc/Cc are slices of the
+    # (dp, -, model)-sharded projection, re-joined along the model-sharded
+    # feature axis — exactly the sharded concat jax 0.4.37 miscompiles
+    return z, concat_rows([xin, Bc, Cc], axis=-1,
+                          labels=("dp", None, "model")), dt
 
 
 def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:

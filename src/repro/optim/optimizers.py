@@ -15,13 +15,12 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.models.spec import PSpec, materialize
+from repro.models.spec import PSpec
 
 QBLOCK = 256  # block size for 8-bit moment quantization
 

@@ -9,12 +9,6 @@ geometrically — the cheap path when the node-partition itself changed
 """
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core import HistoricalState, init_history
 from repro.graph import ClusterSampler
 from repro.graph.partition import partition_graph

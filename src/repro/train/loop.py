@@ -19,7 +19,7 @@ batches are then built with their adjacency re-bucketed host-side
 from __future__ import annotations
 
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """repro.dist.sharding: no-ops off-mesh, correct PartitionSpecs on a fake
 8-device mesh (subprocess: device count is locked at jax init), axis sizes on
 1D/2D/3D meshes, and the concat_rows partitioner-bug workaround."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -4,7 +4,6 @@ Small placeholder-device meshes validate the same code paths the 512-device
 dry-run uses: the flat multi-cluster LMC step under data/model sharding, and
 an LM train step with the full production sharding rules.
 """
-import pytest
 
 from _spmd import run_spmd as _run
 

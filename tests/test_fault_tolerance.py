@@ -1,6 +1,5 @@
 """Checkpoint/restart, preemption recovery, elastic rescale, data resume."""
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.core import LMC

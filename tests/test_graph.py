@@ -1,12 +1,10 @@
 """Graph substrate: structures, partitioner, sampler invariants."""
 import numpy as np
-import pytest
 from _prop import given, strategies as st
 
-from repro.graph import (ClusterSampler, edge_cut_fraction, make_sbm_dataset,
-                         partition_graph)
+from repro.graph import ClusterSampler, edge_cut_fraction, make_sbm_dataset
 from repro.graph.partition import partition_balance
-from repro.graph.structure import beta_score, build_subgraph
+from repro.graph.structure import beta_score
 
 
 def test_graph_symmetry(small_graph):

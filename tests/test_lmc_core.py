@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (CLUSTER, GAS, LMC, METHODS, backward_sgd_grads,
+from repro.core import (LMC, METHODS, backward_sgd_grads,
                         exact_layer_values, from_graph, full_grads,
                         init_history, make_train_step, to_device_batch)
 from repro.graph import ClusterSampler

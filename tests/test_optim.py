@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from _prop import given, settings, strategies as st
 
-from repro.models.spec import PSpec, abstract
+from repro.models.spec import PSpec
 from repro.optim import adafactor, adamw, adamw8bit, sgd, global_norm_clip
 from repro.optim.optimizers import _q8_decode, _q8_encode
 

@@ -1,0 +1,122 @@
+"""Tests for repro.data.prefetch — ordering, bounded lookahead, exception
+propagation, and prompt close() even with a blocked worker."""
+import threading
+import time
+
+import pytest
+
+from repro.data.prefetch import Prefetcher
+
+
+def _wait_until(pred, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.01)
+    return pred()
+
+
+def test_yields_all_items_in_order():
+    p = Prefetcher(iter(range(100)))
+    assert list(p) == list(range(100))
+
+
+def test_exhausted_stream_stays_exhausted():
+    p = Prefetcher(iter([1]))
+    assert list(p) == [1]
+    with pytest.raises(StopIteration):
+        next(p)  # must not hang on the drained sentinel
+
+
+def test_empty_source():
+    assert list(Prefetcher(iter([]))) == []
+
+
+def test_depth_must_be_positive():
+    with pytest.raises(ValueError):
+        Prefetcher(iter([]), depth=0)
+
+
+def test_bounded_lookahead():
+    """The worker never runs more than `depth` items ahead of the consumer."""
+    produced = []
+
+    def source():
+        for i in range(50):
+            produced.append(i)
+            yield i
+
+    depth = 3
+    p = Prefetcher(source(), depth=depth)
+    try:
+        got = [next(p) for _ in range(5)]
+        assert got == list(range(5))
+        # give the worker time to run as far ahead as the queue allows;
+        # +1 for the item it may hold while blocked in put()
+        _wait_until(lambda: len(produced) >= 5 + depth)
+        time.sleep(0.1)
+        assert len(produced) <= 5 + depth + 1
+    finally:
+        p.close()
+
+
+def test_exception_propagates_after_good_items():
+    def source():
+        yield 1
+        yield 2
+        raise RuntimeError("bad batch")
+
+    p = Prefetcher(source())
+    assert next(p) == 1
+    assert next(p) == 2
+    with pytest.raises(RuntimeError, match="bad batch"):
+        next(p)
+    # iterator stays exhausted, does not hang
+    with pytest.raises(StopIteration):
+        next(p)
+
+
+def test_exception_on_first_item():
+    def source():
+        raise ValueError("boom")
+        yield  # pragma: no cover
+
+    with pytest.raises(ValueError, match="boom"):
+        next(Prefetcher(source()))
+
+
+def test_close_unblocks_full_queue_worker():
+    """close() must terminate a worker stuck in a full-queue put."""
+    release = threading.Event()
+
+    def source():
+        for i in range(1000):
+            yield i
+        release.set()  # only reached if the worker ran to completion
+
+    p = Prefetcher(source(), depth=1)
+    # let the worker fill the queue and block in put()
+    _wait_until(lambda: p.q.full())
+    p.close()
+    assert _wait_until(lambda: not p._thread.is_alive()), (
+        "worker thread still alive after close()")
+    assert not release.is_set(), "worker should have stopped early"
+    with pytest.raises(StopIteration):
+        next(p)
+
+
+def test_close_is_idempotent():
+    p = Prefetcher(iter(range(10)))
+    p.close()
+    p.close()
+    with pytest.raises(StopIteration):
+        next(p)
+
+
+def test_sentinel_collision_safe():
+    """A source yielding exotic values (including the StopIteration class
+    itself) must round-trip — the old implementation used StopIteration as
+    its end-of-stream sentinel and would truncate this stream."""
+    items = [None, StopIteration, 0, ""]
+    assert list(Prefetcher(iter(items))) == items

@@ -1,10 +1,9 @@
 """End-to-end behaviour: the paper's headline claims on the full system."""
 import jax
 import numpy as np
-import pytest
 
 from repro.core import GAS, LMC, from_graph, full_grads
-from repro.graph import ClusterSampler, make_sbm_dataset, partition_graph
+from repro.graph import ClusterSampler
 from repro.models import make_gnn
 from repro.optim import sgd
 from repro.train import GNNTrainer
