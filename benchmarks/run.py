@@ -18,6 +18,9 @@ Paper mapping (DESIGN.md §6):
   bench_spmm_kernel           -> kernel hot-spot micro-benchmark
   bench_compensate            -> Eq. 9/12 fused gather+lerp micro-benchmark
                                  (streamed vs resident store gather)
+  bench_pipeline              -> async sampling pipeline + minibatch
+                                 recycling (DESIGN.md §9): sync-vs-prefetch
+                                 step times, overlap fraction, ρ=4 parity
 """
 from __future__ import annotations
 
@@ -432,6 +435,8 @@ def bench_compensate(fast=False):
     return rows
 
 
+from benchmarks.bench_pipeline import bench_pipeline  # noqa: E402
+
 BENCHES = {
     "grad_error": bench_grad_error,
     "convergence_speed": bench_convergence_speed,
@@ -442,6 +447,7 @@ BENCHES = {
     "spider": bench_spider,
     "spmm_kernel": bench_spmm_kernel,
     "compensate": bench_compensate,
+    "pipeline": bench_pipeline,
 }
 
 

@@ -7,6 +7,10 @@ onto.
     PYTHONPATH=src python examples/train_gnn.py --preset arxiv-like   # 169k nodes
     PYTHONPATH=src python examples/train_gnn.py --backend ell  # Pallas SpMM/
         # compensate kernels on the hot path (compiled on TPU, interpreted on CPU)
+    PYTHONPATH=src python examples/train_gnn.py --prefetch 4 --recycle 4
+        # async sampling pipeline + minibatch recycling (DESIGN.md §9)
+    PYTHONPATH=src python examples/train_gnn.py --no-prefetch
+        # legacy synchronous sampling (stateful sampler RNG)
 """
 import argparse
 import time
@@ -19,16 +23,30 @@ from repro.train import GNNTrainer
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=400)
-    ap.add_argument("--preset", default="arxiv-cpu")
+    ap = argparse.ArgumentParser(
+        description="End-to-end LMC GNN training on a synthetic full-scale "
+                    "dataset (checkpointing, fault tolerance, Pallas kernel "
+                    "path, async sampling pipeline)")
+    ap.add_argument("--steps", type=int, default=400,
+                    help="total train steps (resumes from checkpoint if any)")
+    ap.add_argument("--preset", default="arxiv-cpu",
+                    help="synthetic dataset preset, e.g. arxiv-cpu (4k nodes) "
+                         "or arxiv-like (169k); see repro.graph.synthetic."
+                         "DATASET_PRESETS")
     ap.add_argument("--arch", default="gcnii", choices=["gcn", "gcnii",
-                                                        "sage", "gin"])
-    ap.add_argument("--method", default="lmc", choices=list(METHODS))
-    ap.add_argument("--hidden", type=int, default=128)
-    ap.add_argument("--layers", type=int, default=4)
-    ap.add_argument("--parts", type=int, default=32)
-    ap.add_argument("--clusters-per-batch", type=int, default=4)
+                                                        "sage", "gin"],
+                    help="GNN architecture")
+    ap.add_argument("--method", default="lmc", choices=list(METHODS),
+                    help="mini-batch method: lmc, gas, cluster, or the "
+                         "compensation ablations")
+    ap.add_argument("--hidden", type=int, default=128,
+                    help="hidden width of every GNN layer")
+    ap.add_argument("--layers", type=int, default=4,
+                    help="number of GNN layers")
+    ap.add_argument("--parts", type=int, default=32,
+                    help="graph partition count B (clusters)")
+    ap.add_argument("--clusters-per-batch", type=int, default=4,
+                    help="clusters c sampled per mini-batch (Alg. 1 line 4)")
     ap.add_argument("--backend", default="segment", choices=["segment", "ell"],
                     help="aggregation hot path: jnp segment-sum or the Pallas "
                          "bucketed-ELL SpMM/compensate kernels (compiled on "
@@ -40,8 +58,29 @@ def main():
     ap.add_argument("--no-stream", dest="stream", action="store_false",
                     help="force the legacy resident VMEM gather blocks "
                          "(small graphs only)")
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_gnn_ckpt")
+    ap.add_argument("--prefetch", type=int, default=2, metavar="N",
+                    help="async sampling pipeline queue depth: background "
+                         "threads build + bucket the next N batches while "
+                         "the device steps, with double-buffered "
+                         "host->device transfer (DESIGN.md §9); 0 keeps the "
+                         "schedule-indexed stream but builds synchronously")
+    ap.add_argument("--no-prefetch", dest="prefetch", action="store_const",
+                    const=None,
+                    help="fall back to the legacy fully synchronous sampling "
+                         "path (stateful sampler RNG, no pipeline)")
+    ap.add_argument("--recycle", type=int, default=1, metavar="R",
+                    help="minibatch recycling: reuse each sampled subgraph "
+                         "for R consecutive steps before resampling "
+                         "(LazyGNN-style; staleness stays within LMC's "
+                         "Thm 2 bound — see DESIGN.md §9)")
+    ap.add_argument("--pipeline-workers", type=int, default=2, metavar="W",
+                    help="builder threads for the sampling pipeline")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_gnn_ckpt",
+                    help="checkpoint directory (delete it for a fresh run)")
     args = ap.parse_args()
+    if args.prefetch is None and args.recycle > 1:
+        ap.error("--no-prefetch is incompatible with --recycle > 1 "
+                 "(recycling needs the schedule-indexed pipeline)")
 
     t0 = time.time()
     g = make_sbm_dataset(args.preset, seed=0)
@@ -58,7 +97,9 @@ def main():
                              edge_weight_mode=m.edge_weight_mode)
     tr = GNNTrainer(gnn, m, g, sampler, sgd(lr=0.2), seed=0,
                     ckpt_dir=args.ckpt_dir, ckpt_every=100,
-                    backend=args.backend, stream=args.stream)
+                    backend=args.backend, stream=args.stream,
+                    prefetch=args.prefetch, recycle=args.recycle,
+                    pipeline_workers=args.pipeline_workers)
     if tr.restore():
         print(f"resumed from checkpoint at step {tr.step_num}")
 
@@ -69,6 +110,7 @@ def main():
               f"loss {h['loss']:.4f} train_acc {h['train_acc']:.3f} "
               f"val {float(tr.eval('val')):.3f}")
     tr.save()
+    tr.close()   # stop pipeline workers
     print(f"done: test acc {float(tr.eval('test')):.4f}; "
           f"checkpoints in {args.ckpt_dir}")
 

@@ -10,11 +10,24 @@
 # *committed* baselines (snapshotted before the run) and the gate fails on a
 # >1.3x regression of the default (streamed) pallas kernel path, plus the
 # vectorized ELL builder's >=10x speedup over the legacy loop.
+# The pipeline benchmark (DESIGN.md §9) adds two more tripwires: the
+# prefetch-path step must stay within 1.25x of the pure-compute step, and
+# the recycled overlap fraction must not drop more than 0.25 below the
+# committed baseline.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 python -m repro.analysis src/
+
+# docstring hygiene (ruff D rules scoped in ruff.toml); optional: the pinned
+# container may not ship ruff, and the bespoke `repro.analysis` pass above is
+# the authoritative gate
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+else
+    echo "check: ruff not installed; skipping lint (config in ruff.toml)"
+fi
 
 python -m pytest -x -q "$@"
 
@@ -23,13 +36,15 @@ python -m pytest -x -q "$@"
 # previous run would let a slow <1.3x-per-run regression through)
 BASE_DIR=$(mktemp -d)
 trap 'rm -rf "$BASE_DIR"' EXIT
-for f in experiments/bench/BENCH_spmm.json experiments/bench/BENCH_compensate.json; do
+for f in experiments/bench/BENCH_spmm.json experiments/bench/BENCH_compensate.json \
+         experiments/bench/BENCH_pipeline.json; do
     git show "HEAD:$f" > "$BASE_DIR/$(basename "$f")" 2>/dev/null \
         || rm -f "$BASE_DIR/$(basename "$f")"   # not committed yet: no gate
 done
 
 python -m benchmarks.run --fast --only spmm_kernel
 python -m benchmarks.run --fast --only compensate
+python -m benchmarks.run --fast --only pipeline
 
 BASELINE_DIR="$BASE_DIR" python - <<'EOF'
 import json
@@ -70,4 +85,33 @@ for name in ("BENCH_spmm.json", "BENCH_compensate.json"):
             f"{name}:{key} regressed {ratio:.2f}x "
             f"({old['us_per_call']:.0f}us -> {row['us_per_call']:.0f}us)")
         print(f"check OK: {name}:{key} {ratio:.2f}x vs baseline")
+
+# pipeline tripwires (DESIGN.md §9): absolute prefetch-overhead bound plus
+# an overlap-fraction regression gate against the committed baseline
+PIPE_RATIO_TOL = 1.25    # fast-mode headroom over the 1.15x acceptance bar
+OVERLAP_DROP_TOL = 0.25  # absolute drop allowed in the recycled overlap
+fresh = json.load(open("experiments/bench/BENCH_pipeline.json"))["rows"]
+pr = fresh["step_prefetch"]["ratio_vs_compute"]
+assert pr <= PIPE_RATIO_TOL, (
+    f"pipeline:step_prefetch costs {pr:.2f}x the pure-compute step "
+    f"(bound {PIPE_RATIO_TOL}x)")
+print(f"check OK: pipeline:step_prefetch {pr:.2f}x vs pure compute")
+par = fresh["recycle_parity"]
+if par.get("gate"):
+    assert par["rel_gap"] <= 0.05, (
+        f"pipeline:recycle_parity gap {par['rel_gap']:.1%} > 5% "
+        f"at {par['steps']} steps")
+    print(f"check OK: pipeline:recycle_parity {par['rel_gap']:.1%}")
+bpath = base_dir / "BENCH_pipeline.json"
+if bpath.exists():
+    old = json.load(open(bpath))["rows"]["overlap"]["overlap_fraction_recycle4"]
+    new = fresh["overlap"]["overlap_fraction_recycle4"]
+    assert new >= old - OVERLAP_DROP_TOL, (
+        f"pipeline:overlap_fraction_recycle4 dropped {old:.2f} -> {new:.2f} "
+        f"(> {OVERLAP_DROP_TOL} below the committed baseline)")
+    print(f"check OK: pipeline:overlap_fraction_recycle4 {new:.2f} "
+          f"(baseline {old:.2f})")
+else:
+    print("check: no committed baseline for BENCH_pipeline.json; "
+          "skipping overlap tripwire")
 EOF

@@ -18,6 +18,7 @@ from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.history import HistoricalState, gather_rows, scatter_rows
 from repro.core.methods import MBMethod
@@ -52,21 +53,37 @@ class Batch(NamedTuple):
     ell: Optional[ELLGraph] = None
 
 
-def to_device_batch(sg: PaddedSubgraph, *, backend: str = "segment",
-                    ell_buckets=(8, 32, 128)) -> Batch:
+def host_batch(sg: PaddedSubgraph, *, backend: str = "segment",
+               ell_buckets=(8, 32, 128)) -> Batch:
+    """Build a Batch of *host* (numpy) arrays, including the re-bucketed ELL
+    adjacency for ``backend="ell"`` — everything except the device transfer.
+
+    This is the per-batch work the async pipeline runs on worker threads
+    (pure numpy, no JAX calls, so workers never contend on device dispatch);
+    the consumer moves the whole pytree over with one ``jax.device_put``
+    (DESIGN.md §9). ``to_device_batch`` composes the two for the synchronous
+    path.
+    """
     assert backend in AGG_BACKENDS, backend
     ell = None
     if backend == "ell":
         ell = ell_from_coo(sg.edge_src, sg.edge_dst, sg.edge_w, sg.n_ext,
-                           buckets=ell_buckets)
+                           buckets=ell_buckets, as_jax=False)
     return Batch(
-        batch_gids=jnp.asarray(sg.batch_gids), halo_gids=jnp.asarray(sg.halo_gids),
-        batch_mask=jnp.asarray(sg.batch_mask), halo_mask=jnp.asarray(sg.halo_mask),
-        edge_src=jnp.asarray(sg.edge_src), edge_dst=jnp.asarray(sg.edge_dst),
-        edge_w=jnp.asarray(sg.edge_w), labels=jnp.asarray(sg.labels),
-        labeled_mask=jnp.asarray(sg.labeled_mask), beta=jnp.asarray(sg.beta),
-        loss_scale=jnp.asarray(sg.loss_scale), grad_scale=jnp.asarray(sg.grad_scale),
+        batch_gids=np.asarray(sg.batch_gids), halo_gids=np.asarray(sg.halo_gids),
+        batch_mask=np.asarray(sg.batch_mask), halo_mask=np.asarray(sg.halo_mask),
+        edge_src=np.asarray(sg.edge_src), edge_dst=np.asarray(sg.edge_dst),
+        edge_w=np.asarray(sg.edge_w), labels=np.asarray(sg.labels),
+        labeled_mask=np.asarray(sg.labeled_mask), beta=np.asarray(sg.beta),
+        loss_scale=np.asarray(sg.loss_scale), grad_scale=np.asarray(sg.grad_scale),
         ell=ell)
+
+
+def to_device_batch(sg: PaddedSubgraph, *, backend: str = "segment",
+                    ell_buckets=(8, 32, 128)) -> Batch:
+    """Host subgraph -> device Batch (``host_batch`` + ``jax.device_put``)."""
+    return jax.device_put(host_batch(sg, backend=backend,
+                                     ell_buckets=ell_buckets))
 
 
 def _combine(mode: str, beta: jax.Array, hist: jax.Array, fresh: jax.Array,

@@ -1,4 +1,5 @@
+"""Data-loading layer: token streams and the async subgraph pipeline."""
 from repro.data.tokens import TokenStream
-from repro.data.prefetch import Prefetcher
+from repro.data.prefetch import Prefetcher, SubgraphPipeline
 
-__all__ = ["TokenStream", "Prefetcher"]
+__all__ = ["TokenStream", "Prefetcher", "SubgraphPipeline"]

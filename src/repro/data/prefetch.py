@@ -1,9 +1,30 @@
-"""Host-side prefetch: overlap batch construction with device compute."""
+"""Host-side prefetch: overlap batch construction with device compute.
+
+Two layers live here (DESIGN.md §9):
+
+* :class:`Prefetcher` — a generic background-thread iterator wrapper with a
+  bounded buffer, in-order delivery, exception propagation and prompt
+  ``close()``. It knows nothing about graphs.
+* :class:`SubgraphPipeline` — the LMC training pipeline built on top of it: a
+  thread pool pulls schedule slots from ``ClusterSampler.clusters_at`` (a pure
+  function of the slot index, so worker arrival order cannot perturb the
+  stream), builds padded ``Batch`` + fixed-capacity ELL buckets on the host,
+  hands them through the ``Prefetcher`` queue, and double-buffers the
+  host→device transfer: while the consumer runs step k, the transfer for the
+  next batch is already staged with ``jax.device_put``. ``recycle=ρ`` reuses
+  each sampled subgraph for ρ consecutive steps (LazyGNN-style minibatch
+  recycling) before resampling; LMC's bounded-staleness historical stores
+  keep this within the Thm 2 staleness budget because the store-refresh path
+  is unchanged — every recycled step still rewrites its store rows.
+"""
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
-from typing import Iterator
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Iterator, Optional
 
 
 class _Done:
@@ -31,6 +52,10 @@ class Prefetcher:
     * ``close()`` stops the worker thread promptly even when it is blocked
       in a full-queue ``put`` and joins it; it is idempotent and is also
       called on GC. Iterating after ``close()`` raises ``StopIteration``.
+
+    Thread-safety: one producer (the internal worker) and one consumer
+    thread; ``__next__``/``poll`` must not be called concurrently from
+    multiple threads.
     """
 
     # worker wakes up at this period to notice close() while blocked on a
@@ -38,10 +63,12 @@ class Prefetcher:
     _PUT_POLL_S = 0.05
 
     def __init__(self, source: Iterator, depth: int = 2):
+        """Start prefetching from ``source`` with a ``depth``-item buffer."""
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.source = source
         self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._held = None   # terminal item peeked by poll(), kept in order
         self._exhausted = False
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
@@ -68,11 +95,16 @@ class Prefetcher:
         self._put(_Done)
 
     def __iter__(self):
+        """Return self (single-consumer iterator)."""
         return self
 
     def __next__(self):
+        """Next item in source order; blocks until one is buffered."""
         if self._exhausted:
             raise StopIteration
+        if self._held is not None:
+            item, self._held = self._held, None
+            return self._resolve(item)
         while True:
             if self._stop.is_set():
                 raise StopIteration
@@ -81,6 +113,32 @@ class Prefetcher:
                 break
             except queue.Empty:
                 continue
+        return self._resolve(item)
+
+    def poll(self):
+        """Non-blocking variant of ``__next__``: an item if one is already
+        buffered, else ``None`` (also ``None`` at end-of-stream).
+
+        Terminal items (end-of-stream, or an exception raised by the
+        source) are *held back* rather than consumed here, so they surface
+        from the next blocking ``__next__`` at their exact position in the
+        stream. The pipeline uses poll() to opportunistically stage the next
+        device transfer without stalling the train step — an error for a
+        later slot must not fire while an earlier slot is being fetched.
+        """
+        if self._exhausted or self._stop.is_set() or self._held is not None:
+            return None
+        try:
+            item = self.q.get_nowait()
+        except queue.Empty:
+            return None
+        if item is _Done or isinstance(item, _Raised):
+            self._held = item
+            return None
+        return item
+
+    def _resolve(self, item):
+        """Map a queue item to (value | StopIteration | re-raised error)."""
         if item is _Done:
             self._exhausted = True
             raise StopIteration
@@ -90,6 +148,7 @@ class Prefetcher:
         return item
 
     def close(self) -> None:
+        """Stop and join the worker; idempotent, also invoked on GC."""
         self._stop.set()
         # drain so a worker blocked mid-put sees _stop on its next poll and
         # the queue's buffered batches are released promptly
@@ -101,6 +160,214 @@ class Prefetcher:
         self._thread.join(timeout=5.0)
 
     def __del__(self):
+        """Best-effort close when the prefetcher is garbage collected."""
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+class SubgraphPipeline:
+    """Async subgraph sampling pipeline with minibatch recycling.
+
+    Yields device-ready ``repro.core.Batch`` objects, one per *training
+    step*. Internally a ``ThreadPoolExecutor`` builds schedule slots ahead of
+    the consumer (``sampler.build_batch`` + ``host_batch``: pure numpy, no
+    JAX calls on worker threads), a :class:`Prefetcher` buffers up to
+    ``depth`` built batches, and the consumer side keeps one extra batch
+    staged on device (``jax.device_put`` issued while the previous step is
+    still running — double-buffered host→device transfer).
+
+    Determinism contract: the stream is a pure function of
+    ``(sampler.seed, mode, recycle, step index)``. Slot ``i`` (steps
+    ``[i*recycle, (i+1)*recycle)``) always carries the clusters
+    ``sampler.clusters_at(i, mode=mode)``, regardless of ``depth``,
+    ``workers`` or thread scheduling; ``depth=0`` builds the identical stream
+    synchronously in the consumer thread. Resuming from ``start_step`` k
+    replays exactly the tail of a run started at 0 (checkpoint recovery).
+
+    Recycling (``recycle=ρ > 1``): each built subgraph is yielded for ρ
+    consecutive steps before the next slot is fetched, amortizing the host
+    sampling + bucketing cost 1/ρ. Under ``mode="epoch"`` an "epoch" becomes
+    ρ·B/c steps but still visits every cluster exactly once per B/c distinct
+    slots. Safe for LMC because the historical stores are refreshed by every
+    step — including recycled ones — so staleness stays within the Thm 2
+    ρ-term (DESIGN.md §9 discusses the bound).
+
+    Lifecycle: iterate (``for batch in pipe`` / ``next(pipe)``), then
+    ``close()`` — or use it as a context manager, which closes on exit even
+    when the consumer raises mid-epoch. A worker-side exception surfaces in
+    the consumer at the failed slot's position in the stream; buffered
+    earlier batches drain first. After ``close()`` iteration raises
+    ``StopIteration``.
+
+    Thread-safety: single consumer thread; the sampler's schedule API
+    (``clusters_at``/``build_batch``) is called concurrently from workers
+    and must stay read-only (``ClusterSampler``'s is).
+    """
+
+    def __init__(self, sampler, *, backend: str = "segment", depth: int = 2,
+                 workers: int = 2, recycle: int = 1, mode: str = "uniform",
+                 start_step: int = 0, num_steps: Optional[int] = None,
+                 ell_buckets=(8, 32, 128)):
+        """Configure and (for ``depth >= 1``) start the background pipeline.
+
+        Args:
+            sampler: a ``ClusterSampler`` (any object with ``clusters_at`` +
+                ``build_batch``); its schedule API must be thread-safe.
+            backend: ``"segment"`` or ``"ell"`` — whether workers also bucket
+                each batch's adjacency into the Pallas kernels' ELL layout.
+            depth: prefetch queue depth. ``0`` disables all threading: the
+                synchronous fallback path, same stream (tiny graphs,
+                debugging). ``>= 1`` bounds host lookahead to
+                ``depth + workers`` built batches plus one staged on device.
+            workers: thread-pool size for host-side batch construction.
+            recycle: ρ — consecutive steps each sampled subgraph is reused.
+            mode: ``"uniform"`` (iid slots, Alg. 1 line 4) or ``"epoch"``
+                (shuffled epochs, every cluster once per B/c slots).
+            start_step: global step to resume from (slot ``start_step //
+                recycle``, mid-recycle-window offsets included).
+            num_steps: stop after this many yields (``None`` = unbounded).
+            ell_buckets: ELL degree-bucket sizes for ``backend="ell"``.
+        """
+        if depth < 0:
+            raise ValueError(f"depth must be >= 0, got {depth}")
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        if recycle < 1:
+            raise ValueError(f"recycle must be >= 1, got {recycle}")
+        if start_step < 0:
+            raise ValueError(f"start_step must be >= 0, got {start_step}")
+        self.sampler = sampler
+        self.backend = backend
+        self.depth = int(depth)
+        self.workers = int(workers)
+        self.recycle = int(recycle)
+        self.mode = mode
+        self.ell_buckets = ell_buckets
+        self._step = int(start_step)
+        self._end_step = None if num_steps is None else self._step + int(num_steps)
+        self._cur_slot = -1
+        self._cur_batch = None
+        self._staged = None          # device batch for the next slot
+        self._closed = False
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pf: Optional[Prefetcher] = None
+        if self.depth >= 1:
+            first_slot = self._step // self.recycle
+            end_slot = (None if self._end_step is None
+                        else -(-self._end_step // self.recycle))
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.workers,
+                thread_name_prefix="subgraph-pipeline")
+            self._pf = Prefetcher(self._built_stream(first_slot, end_slot),
+                                  depth=self.depth)
+
+    # ------------------------------------------------------------- producer
+    def _build_host(self, slot: int):
+        """Worker-side: schedule slot -> host (numpy) Batch. Pure numpy."""
+        from repro.core.lmc import host_batch
+        cids = self.sampler.clusters_at(slot, mode=self.mode)
+        sg = self.sampler.build_batch(cids)
+        return host_batch(sg, backend=self.backend,
+                          ell_buckets=self.ell_buckets)
+
+    def _built_stream(self, first_slot: int, end_slot: Optional[int]):
+        """Generator the Prefetcher drives: in-order built host batches.
+
+        Keeps up to ``workers`` build futures in flight; ``.result()``
+        re-raises worker exceptions in slot order so the Prefetcher's
+        exception contract holds unchanged.
+        """
+        slots = (itertools.count(first_slot) if end_slot is None
+                 else iter(range(first_slot, end_slot)))
+        pending: deque = deque()
+        try:
+            while True:
+                while len(pending) < self.workers:
+                    try:
+                        s = next(slots)
+                    except StopIteration:
+                        break
+                    pending.append(self._pool.submit(self._build_host, s))
+                if not pending:
+                    return
+                yield pending.popleft().result()
+        finally:
+            for f in pending:
+                f.cancel()
+
+    # ------------------------------------------------------------- consumer
+    def _fetch_next_slot(self):
+        """Device batch for the next schedule slot, advancing the stream.
+
+        With prefetch: take the staged transfer if one exists, else block on
+        the queue + ``device_put``; then opportunistically stage the transfer
+        for the following slot (this is the device-side double buffer).
+        Without prefetch (``depth=0``): build + transfer inline.
+        """
+        import jax
+        if self._pf is None:
+            slot = self._step // self.recycle
+            return jax.device_put(self._build_host(slot))
+        if self._staged is not None:
+            batch, self._staged = self._staged, None
+        else:
+            batch = jax.device_put(next(self._pf))   # may raise StopIteration
+        nxt = self._pf.poll()
+        if nxt is not None:
+            self._staged = jax.device_put(nxt)
+        return batch
+
+    def __iter__(self):
+        """Return self (single-consumer iterator)."""
+        return self
+
+    def __next__(self):
+        """Device Batch for the next training step (recycling-aware)."""
+        if self._closed:
+            raise StopIteration
+        if self._end_step is not None and self._step >= self._end_step:
+            raise StopIteration
+        slot = self._step // self.recycle
+        if slot != self._cur_slot:
+            self._cur_batch = self._fetch_next_slot()
+            self._cur_slot = slot
+        self._step += 1
+        return self._cur_batch
+
+    @property
+    def step(self) -> int:
+        """Global index of the next step this pipeline will yield."""
+        return self._step
+
+    def close(self) -> None:
+        """Shut down the queue and thread pool; idempotent, also on GC.
+
+        Safe to call with builds still in flight (consumer raised mid-epoch):
+        the Prefetcher unblocks/joins its worker, then queued-but-unstarted
+        builds are cancelled and the pool joins.
+        """
+        if self._closed:
+            return
+        self._closed = True
+        self._cur_batch = self._staged = None
+        if self._pf is not None:
+            self._pf.close()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True, cancel_futures=True)
+
+    def __enter__(self):
+        """Context-manager entry: the pipeline itself."""
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        """Context-manager exit: always close, never swallow the exception."""
+        self.close()
+        return False
+
+    def __del__(self):
+        """Best-effort close when the pipeline is garbage collected."""
         try:
             self.close()
         except Exception:

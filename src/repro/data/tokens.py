@@ -12,8 +12,16 @@ import numpy as np
 
 
 class TokenStream:
+    """Infinite iterator of synthetic LM batches, resumable by step counter.
+
+    Batch ``i`` is a pure function of ``(seed, i)`` (counter-based Philox),
+    so checkpointing just the ``step`` integer reproduces the exact stream.
+    Yields ``{"tokens": (batch, seq_len) int32, "loss_mask": float32}``.
+    """
+
     def __init__(self, vocab: int, batch: int, seq_len: int, *, seed: int = 0,
                  zipf_a: float = 1.2, repeat_p: float = 0.3):
+        """Set vocab/batch/seq shape and the Zipf(zipf_a) unigram model."""
         self.vocab = vocab
         self.batch = batch
         self.seq_len = seq_len
@@ -25,9 +33,11 @@ class TokenStream:
         self.repeat_p = repeat_p
 
     def __iter__(self):
+        """Return self (infinite iterator)."""
         return self
 
     def __next__(self) -> dict:
+        """Generate batch ``self.step`` and advance the counter."""
         rng = np.random.Generator(np.random.Philox(key=self.seed,
                                                    counter=self.step))
         toks = rng.choice(self.vocab, size=(self.batch, self.seq_len),
@@ -42,7 +52,9 @@ class TokenStream:
 
     # resumable: the counter IS the state
     def state_dict(self) -> dict:
+        """Checkpointable state: just the step counter."""
         return {"step": self.step}
 
     def load_state_dict(self, state: dict) -> None:
+        """Resume the stream from a ``state_dict()`` snapshot."""
         self.step = int(state["step"])

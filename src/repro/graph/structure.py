@@ -43,6 +43,7 @@ class Graph:
 
     @property
     def num_nodes(self) -> int:
+        """Node count n."""
         return int(self.indptr.shape[0] - 1)
 
     @property
@@ -52,16 +53,20 @@ class Graph:
 
     @property
     def num_classes(self) -> int:
+        """Label count (max label + 1)."""
         return int(self.y.max()) + 1
 
     @property
     def feature_dim(self) -> int:
+        """Node feature dimension dx."""
         return int(self.x.shape[1])
 
     def degrees(self) -> np.ndarray:
+        """Per-node (directed) degree, shape (n,) int64."""
         return np.diff(self.indptr).astype(np.int64)
 
     def neighbors(self, v: int) -> np.ndarray:
+        """Neighbor ids of node ``v`` (a CSR slice view)."""
         return self.indices[self.indptr[v]:self.indptr[v + 1]]
 
     @staticmethod
@@ -124,14 +129,17 @@ class PaddedSubgraph:
 
     @property
     def n_batch(self) -> int:
+        """Padded in-batch row count NB."""
         return int(self.batch_gids.shape[0])
 
     @property
     def n_halo(self) -> int:
+        """Padded halo row count NH."""
         return int(self.halo_gids.shape[0])
 
     @property
     def n_ext(self) -> int:
+        """Extended-set row count NB + NH (the local id space)."""
         return self.n_batch + self.n_halo
 
 

@@ -81,12 +81,14 @@ class ELLGraph:
 # --------------------------------------------------------------- host builders
 def _ell_buckets(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
                  buckets: Sequence[int], block_rows: int,
-                 row_capacity: Optional[Sequence[int]]):
+                 row_capacity: Optional[Sequence[int]], as_jax: bool = True):
     """CSR -> per-bucket (idx, w, rows) arrays, fully vectorized.
 
     Reproduces the row order of the original per-node loop exactly: rows are
     emitted in (node, chunk) order; each chunk of ≤ kmax neighbors lands in
     the smallest bucket that fits it; deg-0 nodes emit one empty bucket-0 row.
+    ``as_jax=False`` keeps the bucket arrays as host numpy (the prefetch
+    pipeline builds batches off-thread and lets the consumer ``device_put``).
     """
     n = indptr.shape[0] - 1
     deg = np.diff(indptr).astype(np.int64)
@@ -126,9 +128,10 @@ def _ell_buckets(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
                 w[:rows] = np.where(valid, weights[pos], 0.0).astype(np.float32)
             # else: edgeless graph — every row is an all-padding deg-0 row
             rid[:rows] = row_node[sel].astype(np.int32)
-        b_idx.append(jnp.asarray(idx))
-        b_w.append(jnp.asarray(w))
-        b_rows.append(jnp.asarray(rid))
+        conv = jnp.asarray if as_jax else (lambda a: a)
+        b_idx.append(conv(idx))
+        b_w.append(conv(w))
+        b_rows.append(conv(rid))
     return tuple(b_idx), tuple(b_w), tuple(b_rows)
 
 
@@ -193,7 +196,7 @@ def build_ell(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
               buckets=(8, 32, 128), block_rows: int = 256, *,
               num_cols: Optional[int] = None,
               row_capacity: Optional[Sequence[int]] = None,
-              with_transpose: bool = True) -> ELLGraph:
+              with_transpose: bool = True, as_jax: bool = True) -> ELLGraph:
     """CSR -> degree-bucketed ELL (bulk numpy, no per-node Python loop).
 
     Rows with deg > max(buckets) are split into multiple partial rows (their
@@ -210,12 +213,12 @@ def build_ell(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
     num_cols = n if num_cols is None else int(num_cols)
 
     idx, w, rows = _ell_buckets(indptr, indices, weights, buckets, block_rows,
-                                row_capacity)
+                                row_capacity, as_jax)
     t = None
     if with_transpose:
         t_ptr, t_ind, t_w = _transpose_csr(indptr, indices, weights, num_cols)
         ti, tw, tr = _ell_buckets(t_ptr, t_ind, t_w, buckets, block_rows,
-                                  row_capacity)
+                                  row_capacity, as_jax)
         t = ELLGraph(ti, tw, tr, num_rows=num_cols, num_cols=n)
     return ELLGraph(idx, w, rows, num_rows=n, num_cols=num_cols, transpose=t)
 
@@ -234,14 +237,15 @@ def fixed_row_capacity(num_rows: int, num_edges: int, buckets=(8, 32, 128),
 
 def ell_from_coo(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
                  num_rows: int, *, buckets=(8, 32, 128),
-                 block_rows: int = 256, fixed_capacity: bool = True
-                 ) -> ELLGraph:
+                 block_rows: int = 256, fixed_capacity: bool = True,
+                 as_jax: bool = True) -> ELLGraph:
     """Padded local COO (a PaddedSubgraph's edge list) -> square ELLGraph.
 
     Aggregation semantics match ``models.gnn.segment_spmm``: out[dst] +=
     w·h[src]; padded edges (w == 0) contribute nothing. With
     ``fixed_capacity`` the bucket shapes depend only on (num_rows, E), so all
-    batches of a sampler share one jit trace.
+    batches of a sampler share one jit trace. ``as_jax=False`` leaves the
+    bucket arrays on the host (numpy) for deferred ``jax.device_put``.
     """
     src = np.asarray(src, np.int64)
     dst = np.asarray(dst, np.int64)
@@ -253,7 +257,7 @@ def ell_from_coo(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
     caps = (fixed_row_capacity(num_rows, src.shape[0], buckets, block_rows)
             if fixed_capacity else None)
     return build_ell(indptr, src[order], w[order], buckets, block_rows,
-                     num_cols=num_rows, row_capacity=caps)
+                     num_cols=num_rows, row_capacity=caps, as_jax=as_jax)
 
 
 # ------------------------------------------------------------ kernel wrappers

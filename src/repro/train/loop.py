@@ -15,6 +15,15 @@ Production behaviors implemented (and tested in tests/test_fault_tolerance.py):
 SpMM/compensate kernels (compiled on TPU, interpreter fallback on CPU);
 batches are then built with their adjacency re-bucketed host-side
 (`to_device_batch(sg, backend="ell")`).
+
+``prefetch``/``recycle`` route batch construction through the async
+``SubgraphPipeline`` (repro.data.prefetch, DESIGN.md §9): sampling + ELL
+bucketing move to background threads, host→device transfers double-buffer
+behind the step, and each subgraph can be recycled for ρ consecutive steps.
+The pipeline stream is a pure function of (sampler seed, step index), so
+checkpoint resume stays deterministic — the pipeline is simply rebuilt at
+the restored step. The default (``prefetch=None, recycle=1``) keeps the
+legacy synchronous, stateful-RNG path byte-for-byte.
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.core import (HistoricalState, MBMethod, from_graph, accuracy,
                         init_history, make_train_step, to_device_batch)
+from repro.data.prefetch import SubgraphPipeline
 from repro.graph import ClusterSampler
 from repro.models.gnn import GNN
 from repro.optim.optimizers import Optimizer
@@ -47,6 +57,15 @@ class FailureInjector:
 
 
 class GNNTrainer:
+    """Orchestrates sampling, the jit'd LMC step, optimizer updates,
+    checkpointing and fault handling for one training run.
+
+    Not thread-safe: one trainer per (single) training thread; background
+    work (batch construction) is delegated to ``SubgraphPipeline`` workers
+    when ``prefetch``/``recycle`` are set. Call :meth:`close` (or drop the
+    trainer) to stop those workers.
+    """
+
     def __init__(self, gnn: GNN, method: MBMethod, graph, sampler: ClusterSampler,
                  optimizer: Optimizer, *, ckpt_dir: Optional[str] = None,
                  ckpt_every: int = 50, seed: int = 0,
@@ -54,7 +73,38 @@ class GNNTrainer:
                  straggler_deadline: float = 4.0,
                  straggler_policy: str = "skip-store",
                  backend: str = "segment",
-                 stream: Optional[bool] = None):
+                 stream: Optional[bool] = None,
+                 prefetch: Optional[int] = None,
+                 recycle: int = 1,
+                 pipeline_workers: int = 2,
+                 pipeline_mode: str = "uniform"):
+        """Build the jit'd step and (lazily) the batch pipeline.
+
+        Args:
+            gnn / method / graph / sampler / optimizer: the model, the
+                mini-batch method config (LMC/GAS/...), the host graph, its
+                cluster sampler and the optimizer.
+            ckpt_dir / ckpt_every: enable periodic atomic checkpoints.
+            seed: parameter-init PRNG seed.
+            failure_injector: deterministic simulated preemptions (tests).
+            straggler_deadline / straggler_policy: per-step deadline as a
+                multiple of the running-median step time; ``"skip-store"``
+                drops a straggler step's store update (Thm 2-safe).
+            backend: aggregation hot path, ``"segment"`` | ``"ell"``.
+            stream: HBM→VMEM DMA gather knob for the ell kernels
+                (None = autodetect).
+            prefetch: queue depth of the async batch pipeline. ``None``
+                (default) keeps the legacy synchronous stateful-RNG path;
+                ``0`` uses the pipeline's schedule-indexed stream but builds
+                synchronously (debugging / equality tests); ``>= 1`` builds
+                ahead on background threads with double-buffered transfers.
+            recycle: reuse each sampled subgraph for this many consecutive
+                steps (ρ; implies the pipeline path when > 1).
+            pipeline_workers: builder threads when prefetching.
+            pipeline_mode: schedule of the pipeline path — ``"uniform"``
+                (iid cluster draws, Alg. 1 line 4) or ``"epoch"`` (shuffled
+                epochs: every cluster exactly once per B/c distinct slots).
+        """
         self.gnn = gnn
         self.method = method
         self.graph = graph
@@ -66,6 +116,16 @@ class GNNTrainer:
         self.straggler_policy = straggler_policy
         self.backend = backend  # aggregation hot path: "segment" | "ell"
         self.stream = stream    # HBM→VMEM DMA gather knob (None: autodetect)
+        if recycle < 1:
+            raise ValueError(f"recycle must be >= 1, got {recycle}")
+        self.prefetch = prefetch
+        self.recycle = int(recycle)
+        self.pipeline_workers = int(pipeline_workers)
+        self.pipeline_mode = pipeline_mode
+        # pipeline path whenever asked for (prefetch set) or needed (ρ > 1);
+        # built lazily so it always starts at the current step (resume-safe)
+        self._use_pipeline = prefetch is not None or self.recycle > 1
+        self._pipeline: Optional[SubgraphPipeline] = None
 
         self.params = gnn.init_params(jax.random.key(seed))
         pspec = jax.eval_shape(lambda: self.params)  # shapes only
@@ -90,6 +150,7 @@ class GNNTrainer:
                 "store": tuple(self.store)}
 
     def save(self) -> None:
+        """Write an atomic checkpoint (params/opt/stores/sampler RNG/step)."""
         if self.ckpt is None:
             return
         extras = {"step": self.step_num,
@@ -97,6 +158,12 @@ class GNNTrainer:
         self.ckpt.save(self.step_num, self._state_tree(), extras)
 
     def restore(self) -> bool:
+        """Restore the latest checkpoint; returns False when none exists.
+
+        Also discards any in-flight batch pipeline: the stream is a pure
+        function of the step index, so rebuilding it at the restored step
+        replays exactly the batches the uninterrupted run would have seen.
+        """
         if self.ckpt is None or self.ckpt.latest_step() is None:
             return False
         tree, extras, step = self.ckpt.restore(self._state_tree())
@@ -105,10 +172,38 @@ class GNNTrainer:
         self.store = HistoricalState(*tree["store"])
         self.step_num = extras["step"]
         self.sampler.load_state_dict(_from_jsonable(extras["sampler"]))
+        self._reset_pipeline()
         return True
+
+    # ------------------------------------------------------------- pipeline
+    def _batch_pipeline(self) -> SubgraphPipeline:
+        """The async batch source, (re)built lazily at the current step."""
+        if self._pipeline is None:
+            self._pipeline = SubgraphPipeline(
+                self.sampler, backend=self.backend,
+                depth=self.prefetch if self.prefetch is not None else 0,
+                workers=self.pipeline_workers, recycle=self.recycle,
+                mode=self.pipeline_mode, start_step=self.step_num)
+        return self._pipeline
+
+    def _reset_pipeline(self) -> None:
+        """Close the pipeline; the next step rebuilds it at ``step_num``."""
+        if self._pipeline is not None:
+            self._pipeline.close()
+            self._pipeline = None
+
+    def close(self) -> None:
+        """Stop background pipeline workers (idempotent)."""
+        self._reset_pipeline()
 
     # ------------------------------------------------------------------ run
     def run(self, num_steps: int, *, eval_every: int = 0) -> list[dict]:
+        """Train for ``num_steps`` more steps; returns the history list.
+
+        Handles simulated preemptions by restoring the latest checkpoint and
+        continuing (the batch pipeline, when in use, is rebuilt at the
+        restored step so the resumed stream is identical).
+        """
         target = self.step_num + num_steps
         while self.step_num < target:
             try:
@@ -116,8 +211,12 @@ class GNNTrainer:
             except RuntimeError as e:
                 if "simulated preemption" not in str(e):
                     raise
-                # crash recovery: restore last checkpoint and continue
+                # crash recovery: restore last checkpoint and continue; a
+                # failed restore still discards the pipeline so the aborted
+                # step's already-consumed batch is re-fetched, not skipped
                 restored = self.restore()
+                if not restored:
+                    self._reset_pipeline()
                 self.history.append({"step": self.step_num,
                                      "event": "preemption",
                                      "restored": restored})
@@ -131,8 +230,11 @@ class GNNTrainer:
 
     def _one_step(self) -> None:
         t0 = time.time()
-        sg = self.sampler.sample()
-        batch = to_device_batch(sg, backend=self.backend)
+        if self._use_pipeline:
+            batch = next(self._batch_pipeline())
+        else:
+            sg = self.sampler.sample()
+            batch = to_device_batch(sg, backend=self.backend)
         if self.failure_injector is not None:
             self.failure_injector.maybe_fail(self.step_num)
         loss, grads, new_store, metrics = self._step(
@@ -156,6 +258,7 @@ class GNNTrainer:
 
     # ----------------------------------------------------------------- eval
     def eval(self, split: str = "val") -> float:
+        """Full-graph accuracy on the given split ("train"|"val"|"test")."""
         mask = {"val": self.graph.val_mask, "test": self.graph.test_mask,
                 "train": self.graph.train_mask}[split]
         return accuracy(self.gnn, self.params, self.data,
