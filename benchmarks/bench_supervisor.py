@@ -1,0 +1,146 @@
+"""Training-supervisor overhead benchmark (DESIGN.md §10) ->
+BENCH_supervisor.json.
+
+Rows:
+
+* ``step_unguarded``   — median trainer step with all health checks off
+                         (the pre-supervisor hot path);
+* ``step_guarded``     — same trainer config with ``HealthConfig()``
+                         (NaN/Inf + spike checks every step, staleness
+                         counter tick, periodic store sweep).
+                         ``ratio_vs_unguarded`` is the number
+                         ``scripts/check.sh`` gates at <= 1.10x: the guard
+                         must stay noise-level because its inputs (host
+                         loss/grad-norm floats) are syncs the step already
+                         pays for its history record;
+* ``ckpt_sync_save`` / ``ckpt_async_save`` — wall time the *training
+                         thread* spends in one checkpoint save: the
+                         synchronous path pays serialization + fsync-ish
+                         file writes inline, the background path only the
+                         ``jax.device_get`` snapshot and thread handoff
+                         (``async_speedup`` = sync / async).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_supervisor [--fast]`` or
+``python -m benchmarks.run --only supervisor``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments" / "bench"
+
+CFG = dict(preset="ppi-cpu", hidden=64, layers=2, parts=16, c=2, lr=0.3)
+
+
+def _median_step_us(fn, steps: int) -> float:
+    times = []
+    for _ in range(steps):
+        t0 = time.time()
+        fn()
+        times.append(time.time() - t0)
+    return float(np.median(times)) * 1e6
+
+
+def _make_trainer(tmp, g, parts, **kw):
+    from repro.core import LMC
+    from repro.graph import ClusterSampler
+    from repro.models import make_gnn
+    from repro.optim import sgd
+    from repro.train import GNNTrainer
+    gnn = make_gnn("gcn", g.feature_dim, CFG["hidden"], g.num_classes,
+                   CFG["layers"])
+    s = ClusterSampler(g, CFG["parts"], CFG["c"], parts=parts, seed=1)
+    return GNNTrainer(gnn, LMC, g, s, sgd(lr=CFG["lr"]), seed=0,
+                      ckpt_dir=tmp, ckpt_every=10 ** 9, **kw)
+
+
+def bench_supervisor(fast: bool = False) -> dict:
+    """Guarded-vs-unguarded step medians + sync-vs-async checkpoint cost."""
+    import tempfile
+
+    from repro.graph import make_sbm_dataset, partition_graph
+    from repro.train import HealthConfig
+
+    steps = 30 if fast else 60
+    warmup = 5
+    g = make_sbm_dataset(CFG["preset"], seed=3)
+    parts = partition_graph(g, CFG["parts"], seed=0)
+    rows = {}
+
+    with tempfile.TemporaryDirectory() as tmp:
+        tr0 = _make_trainer(tmp + "/unguarded", g, parts)
+        tr0.run(warmup)
+        us_plain = _median_step_us(lambda: tr0.run(1), steps)
+        tr0.close()
+
+        tr1 = _make_trainer(tmp + "/guarded", g, parts,
+                            health=HealthConfig())
+        tr1.run(warmup)
+        us_guard = _median_step_us(lambda: tr1.run(1), steps)
+        assert not any(h.get("event") for h in tr1.history), \
+            "health guard fired on a healthy run"
+
+        ratio = us_guard / us_plain
+        rows["step_unguarded"] = {"us_per_call": us_plain}
+        rows["step_guarded"] = {"us_per_call": us_guard,
+                                "ratio_vs_unguarded": ratio,
+                                "default_path": True}
+        print(f"supervisor/step_unguarded,{us_plain:.0f},", flush=True)
+        print(f"supervisor/step_guarded,{us_guard:.0f},"
+              f"ratio_vs_unguarded={ratio:.3f}", flush=True)
+        if ratio > 1.10:
+            # artifacts must still be written; check.sh enforces the gate
+            print(f"# WARNING: guarded step {ratio:.2f}x unguarded "
+                  f"(bound 1.10x)", flush=True)
+
+        # checkpoint save cost as seen by the training thread
+        iters = 3 if fast else 6
+        def save_us(background: bool) -> float:
+            best = float("inf")
+            for _ in range(iters):
+                tr1.ckpt.wait()
+                tr1.async_ckpt = background
+                t0 = time.time()
+                tr1.save()
+                best = min(best, time.time() - t0)
+            tr1.ckpt.wait()
+            return best * 1e6
+
+        us_sync = save_us(False)
+        us_async = save_us(True)
+        rows["ckpt_sync_save"] = {"us_per_call": us_sync}
+        rows["ckpt_async_save"] = {"us_per_call": us_async,
+                                   "async_speedup": us_sync / us_async}
+        print(f"supervisor/ckpt_sync_save,{us_sync:.0f},", flush=True)
+        print(f"supervisor/ckpt_async_save,{us_async:.0f},"
+              f"async_speedup={us_sync / us_async:.2f}x", flush=True)
+        tr1.close()
+    return rows
+
+
+def main() -> None:
+    """Standalone entry point mirroring ``benchmarks.run``'s artifact shape."""
+    import jax
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer timing steps")
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    rows = bench_supervisor(fast=args.fast)
+    artifact = {"name": "supervisor", "backend": jax.default_backend(),
+                "agg_backend": "segment", "rows": rows}
+    path = OUT / "BENCH_supervisor.json"
+    path.write_text(json.dumps(artifact, indent=2, sort_keys=True))
+    print(f"# wrote {path.relative_to(ROOT)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

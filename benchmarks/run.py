@@ -21,6 +21,9 @@ Paper mapping (DESIGN.md §6):
   bench_pipeline              -> async sampling pipeline + minibatch
                                  recycling (DESIGN.md §9): sync-vs-prefetch
                                  step times, overlap fraction, ρ=4 parity
+  bench_supervisor            -> training-supervisor overhead (DESIGN.md
+                                 §10): guarded-vs-unguarded step medians,
+                                 sync-vs-async checkpoint save cost
 """
 from __future__ import annotations
 
@@ -436,6 +439,7 @@ def bench_compensate(fast=False):
 
 
 from benchmarks.bench_pipeline import bench_pipeline  # noqa: E402
+from benchmarks.bench_supervisor import bench_supervisor  # noqa: E402
 
 BENCHES = {
     "grad_error": bench_grad_error,
@@ -448,6 +452,7 @@ BENCHES = {
     "spmm_kernel": bench_spmm_kernel,
     "compensate": bench_compensate,
     "pipeline": bench_pipeline,
+    "supervisor": bench_supervisor,
 }
 
 

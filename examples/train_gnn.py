@@ -11,6 +11,9 @@ onto.
         # async sampling pipeline + minibatch recycling (DESIGN.md §9)
     PYTHONPATH=src python examples/train_gnn.py --no-prefetch
         # legacy synchronous sampling (stateful sampler RNG)
+    PYTHONPATH=src python examples/train_gnn.py --health --async-ckpt
+        # numerical-health supervisor (NaN/spike guard with rollback) +
+        # background checkpoint writes (DESIGN.md §10)
 """
 import argparse
 import time
@@ -19,7 +22,7 @@ from repro.core import METHODS
 from repro.graph import ClusterSampler, make_sbm_dataset, partition_graph
 from repro.models import make_gnn
 from repro.optim import sgd
-from repro.train import GNNTrainer
+from repro.train import GNNTrainer, HealthConfig
 
 
 def main():
@@ -77,6 +80,26 @@ def main():
                     help="builder threads for the sampling pipeline")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_gnn_ckpt",
                     help="checkpoint directory (delete it for a fresh run)")
+    ap.add_argument("--health", action="store_true",
+                    help="enable the numerical-health guard (NaN/Inf + "
+                         "loss-spike checks with staleness accounting, "
+                         "DESIGN.md §10)")
+    ap.add_argument("--health-policy", default="rollback",
+                    choices=["rollback", "skip-batch"],
+                    help="recovery policy on a divergent step: roll back to "
+                         "the newest verifiable checkpoint, or drop the "
+                         "poisoned update and continue")
+    ap.add_argument("--lr-backoff", type=float, default=1.0, metavar="F",
+                    help="multiply the lr by F on every health rollback "
+                         "(1.0 = keep lr)")
+    ap.add_argument("--max-retries", type=int, default=3, metavar="N",
+                    help="consecutive recovery actions (rollbacks / skips / "
+                         "pipeline rebuilds) allowed before the run aborts "
+                         "with TrainingDivergedError")
+    ap.add_argument("--async-ckpt", action="store_true",
+                    help="write checkpoints on a background thread (the "
+                         "train step only pays the device->host snapshot; "
+                         "files are byte-identical to synchronous saves)")
     args = ap.parse_args()
     if args.prefetch is None and args.recycle > 1:
         ap.error("--no-prefetch is incompatible with --recycle > 1 "
@@ -95,11 +118,16 @@ def main():
                              parts=parts, seed=1,
                              include_halo=m.include_halo,
                              edge_weight_mode=m.edge_weight_mode)
+    health = (HealthConfig(policy=args.health_policy,
+                           lr_backoff=args.lr_backoff)
+              if args.health else None)
     tr = GNNTrainer(gnn, m, g, sampler, sgd(lr=0.2), seed=0,
                     ckpt_dir=args.ckpt_dir, ckpt_every=100,
                     backend=args.backend, stream=args.stream,
                     prefetch=args.prefetch, recycle=args.recycle,
-                    pipeline_workers=args.pipeline_workers)
+                    pipeline_workers=args.pipeline_workers,
+                    health=health, max_retries=args.max_retries,
+                    async_ckpt=args.async_ckpt)
     if tr.restore():
         print(f"resumed from checkpoint at step {tr.step_num}")
 

@@ -14,11 +14,20 @@
 # prefetch-path step must stay within 1.25x of the pure-compute step, and
 # the recycled overlap fraction must not drop more than 0.25 below the
 # committed baseline.
+# The supervisor benchmark (DESIGN.md §10) gates the health-guard overhead:
+# a guarded step must stay <= 1.10x the unguarded step median
+# (BENCH_supervisor.json), and the fault-injection matrix (preemption /
+# pipeline-worker crash / mid-save ckpt failure / NaN batch, each recovering
+# to a stream-deterministic resume) runs in gate 1, before the full suite.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 python -m repro.analysis src/
+
+# gate 1b: the fault-injection matrix fails fast — a broken recovery path
+# invalidates every longer-running gate below it
+python -m pytest -q tests/test_supervisor.py -k "matrix"
 
 # docstring hygiene (ruff D rules scoped in ruff.toml); optional: the pinned
 # container may not ship ruff, and the bespoke `repro.analysis` pass above is
@@ -45,6 +54,7 @@ done
 python -m benchmarks.run --fast --only spmm_kernel
 python -m benchmarks.run --fast --only compensate
 python -m benchmarks.run --fast --only pipeline
+python -m benchmarks.run --fast --only supervisor
 
 BASELINE_DIR="$BASE_DIR" python - <<'EOF'
 import json
@@ -114,4 +124,21 @@ if bpath.exists():
 else:
     print("check: no committed baseline for BENCH_pipeline.json; "
           "skipping overlap tripwire")
+
+# supervisor tripwire (DESIGN.md §10): the numerical-health guard must stay
+# essentially free — its inputs are host floats the step already syncs for
+# the history record, so > 1.10x means someone put work on the hot path
+GUARD_RATIO_TOL = 1.10
+sup = json.load(open("experiments/bench/BENCH_supervisor.json"))["rows"]
+gr = sup["step_guarded"]["ratio_vs_unguarded"]
+assert gr <= GUARD_RATIO_TOL, (
+    f"supervisor:step_guarded costs {gr:.2f}x the unguarded step "
+    f"(bound {GUARD_RATIO_TOL}x)")
+print(f"check OK: supervisor:step_guarded {gr:.2f}x vs unguarded")
+sp = sup["ckpt_async_save"]["async_speedup"]
+assert sp >= 1.0, (
+    f"supervisor:ckpt_async_save is {sp:.2f}x sync — background saves "
+    f"should never cost the training thread more than synchronous ones")
+print(f"check OK: supervisor:ckpt_async_save {sp:.1f}x cheaper on the "
+      f"hot path")
 EOF

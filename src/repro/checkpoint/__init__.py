@@ -1,3 +1,4 @@
-from repro.checkpoint.manager import CheckpointManager, reshard
+from repro.checkpoint.manager import (CheckpointError, CheckpointManager,
+                                      reshard)
 
-__all__ = ["CheckpointManager", "reshard"]
+__all__ = ["CheckpointError", "CheckpointManager", "reshard"]

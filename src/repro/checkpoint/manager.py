@@ -1,9 +1,28 @@
-"""Atomic, resumable, reshardable checkpoints.
+"""Atomic, resumable, reshardable, *verifiable* checkpoints.
 
-Layout: <dir>/step_<N>/   manifest.json  (treedef, shapes, dtypes, extras)
+Layout: <dir>/step_<N>/   manifest.json  (treedef, per-leaf shape/dtype/crc32,
+                                          extras)
                           arr_<i>.npy    (one file per leaf)
         <dir>/step_<N>.tmp.*  while writing; os.replace makes publication
         atomic, so a crash mid-save never corrupts the latest checkpoint.
+        Orphaned tmp dirs left by hard crashes are GC'd on init and after
+        every save.
+
+Hardening (DESIGN.md §10):
+
+* the manifest records per-leaf CRC32 checksums plus shape/dtype, and
+  ``restore`` re-verifies every leaf while loading — a truncated/bit-flipped
+  ``arr_*.npy`` or a mangled manifest surfaces as a :class:`CheckpointError`
+  naming the step and leaf instead of a silently wrong tree;
+* ``restore(step=None)`` walks checkpoints newest-first and returns the
+  newest *verifiable* one, so a corrupt latest checkpoint costs one
+  retention slot, not the run;
+* ``save(..., background=True)`` snapshots the tree to host memory
+  (``jax.device_get``) on the caller's thread, then writes + publishes on a
+  single background writer thread — the training hot path only pays the
+  device→host copy. Saves serialize (each waits for the previous one), and
+  a background failure re-raises at the next ``save``/``wait``. Background
+  and synchronous saves share one write path, so their bytes are identical.
 
 `reshard` re-places a restored tree under new shardings — the elastic-rescale
 path (DESIGN.md §4): params/optimizer state reshard exactly; LMC historical
@@ -16,34 +35,114 @@ import json
 import os
 import shutil
 import tempfile
+import zlib
+from concurrent.futures import Future, ThreadPoolExecutor
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
+MANIFEST_FORMAT = 2   # 1 = pre-checksum manifests (still restorable)
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is missing, structurally wrong, or fails verification."""
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
 
 class CheckpointManager:
-    def __init__(self, directory: str | Path, *, keep: int = 3):
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 fault_hook: Optional[Callable[[int, str], None]] = None):
+        """Open (creating if needed) a checkpoint directory.
+
+        Args:
+            directory: checkpoint root; one ``step_<N>/`` dir per step.
+            keep: retention — older steps beyond the newest ``keep`` are GC'd.
+            fault_hook: test-only injection point, called as
+                ``hook(step, phase)`` before each leaf write
+                (``phase="leaf_<i>"``) and before manifest publication
+                (``"manifest"``); raising aborts the save, cleans the tmp
+                dir and leaves the previous checkpoint untouched
+                (``train.health.FaultPlan.ckpt_hook`` plugs in here).
+        """
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self.fault_hook = fault_hook
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pending: Optional[Future] = None
+        self._inflight_tmp: set = set()
+        self._gc_orphans()   # tmp dirs left behind by a hard crash
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, tree: Any, extras: Optional[dict] = None) -> Path:
+    def save(self, step: int, tree: Any, extras: Optional[dict] = None, *,
+             background: bool = False) -> Path:
+        """Write an atomic checkpoint; returns its (eventual) directory.
+
+        ``background=True`` snapshots the leaves to host numpy here (cheap
+        device→host copy) and hands the file writes + atomic publication to
+        a single writer thread, keeping disk latency off the training hot
+        path. Saves serialize: a new save (or ``wait``/``restore``) first
+        joins the previous one and re-raises its failure, so errors are
+        never silently dropped. Both paths produce byte-identical files.
+        """
+        self.wait()   # serialize saves; surface a prior background failure
         leaves, treedef = jax.tree.flatten(tree)
+        host = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
+        if not background:
+            return self._write(step, host, str(treedef), extras or {})
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(max_workers=1,
+                                            thread_name_prefix="ckpt-writer")
+        self._pending = self._pool.submit(self._write, step, host,
+                                          str(treedef), extras or {})
+        return self.dir / f"step_{step:010d}"
+
+    def wait(self) -> None:
+        """Join the in-flight background save, re-raising its failure."""
+        if self._pending is not None:
+            fut, self._pending = self._pending, None
+            fut.result()
+
+    def close(self) -> None:
+        """Join pending saves and stop the writer thread (idempotent)."""
+        try:
+            self.wait()
+        finally:
+            if self._pool is not None:
+                self._pool.shutdown(wait=True)
+                self._pool = None
+
+    def _write(self, step: int, host_leaves: list, treedef_str: str,
+               extras: dict) -> Path:
+        """Synchronous write path shared by sync and background saves."""
         final = self.dir / f"step_{step:010d}"
         tmp = Path(tempfile.mkdtemp(prefix=f"step_{step:010d}.tmp.",
                                     dir=self.dir))
+        self._inflight_tmp.add(tmp.name)
         try:
-            for i, leaf in enumerate(leaves):
-                np.save(tmp / f"arr_{i}.npy", np.asarray(jax.device_get(leaf)))
+            leaf_meta = []
+            for i, leaf in enumerate(host_leaves):
+                if self.fault_hook is not None:
+                    self.fault_hook(step, f"leaf_{i}")
+                np.save(tmp / f"arr_{i}.npy", leaf)
+                leaf_meta.append({"shape": list(leaf.shape),
+                                  "dtype": str(leaf.dtype),
+                                  "crc32": _crc(leaf)})
             manifest = {
+                "format": MANIFEST_FORMAT,
                 "step": step,
-                "num_leaves": len(leaves),
-                "treedef": str(treedef),
-                "extras": extras or {},
+                "num_leaves": len(host_leaves),
+                "treedef": treedef_str,
+                "leaves": leaf_meta,
+                "extras": extras,
             }
+            if self.fault_hook is not None:
+                self.fault_hook(step, "manifest")
             (tmp / "manifest.json").write_text(json.dumps(manifest))
             if final.exists():
                 shutil.rmtree(final)
@@ -51,6 +150,8 @@ class CheckpointManager:
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
+        finally:
+            self._inflight_tmp.discard(tmp.name)
         self._gc()
         return final
 
@@ -58,12 +159,22 @@ class CheckpointManager:
         steps = self.all_steps()
         for s in steps[:-self.keep]:
             shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+        self._gc_orphans()
+
+    def _gc_orphans(self) -> None:
+        """Remove ``step_*.tmp.*`` dirs not owned by an in-flight save."""
+        for p in self.dir.iterdir():
+            if (p.is_dir() and p.name.startswith("step_")
+                    and ".tmp." in p.name
+                    and p.name not in self._inflight_tmp):
+                shutil.rmtree(p, ignore_errors=True)
 
     # --------------------------------------------------------------- restore
     def all_steps(self) -> list[int]:
         out = []
         for p in self.dir.iterdir():
             if p.is_dir() and p.name.startswith("step_") and \
+                    ".tmp." not in p.name and \
                     (p / "manifest.json").exists():
                 out.append(int(p.name.split("_")[1]))
         return sorted(out)
@@ -72,21 +183,117 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def verify(self, step: int) -> bool:
+        """True iff checkpoint ``step`` exists and all leaves pass
+        manifest shape/dtype/crc32 verification."""
+        self.wait()
+        try:
+            self._load_verified(step, None, None)
+        except CheckpointError:
+            return False
+        return True
+
     def restore(self, target_tree: Any, step: Optional[int] = None
                 ) -> tuple[Any, dict, int]:
         """Restore into the *structure* of target_tree (its leaves are only
-        used for the treedef). Returns (tree, extras, step)."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        path = self.dir / f"step_{step:010d}"
-        manifest = json.loads((path / "manifest.json").read_text())
+        used for the treedef). Returns (tree, extras, step).
+
+        With ``step=None``, walks checkpoints newest-first and restores the
+        newest one that passes verification — a corrupt/truncated latest
+        checkpoint is skipped (with a notice on stdout), not fatal. With an
+        explicit ``step``, verification failure raises
+        :class:`CheckpointError` naming the step and the offending leaf.
+        """
+        self.wait()   # a pending background save must be visible (or fail)
         _, treedef = jax.tree.flatten(target_tree)
-        leaves = [np.load(path / f"arr_{i}.npy")
-                  for i in range(manifest["num_leaves"])]
-        return (jax.tree.unflatten(treedef, leaves), manifest["extras"],
-                step)
+        if step is not None:
+            leaves, manifest = self._load_verified(step, treedef.num_leaves,
+                                                   str(treedef))
+            return (jax.tree.unflatten(treedef, leaves), manifest["extras"],
+                    step)
+        steps = self.all_steps()
+        if not steps:
+            raise CheckpointError(f"no checkpoints in {self.dir}")
+        failures = []
+        for s in reversed(steps):
+            try:
+                leaves, manifest = self._load_verified(s, treedef.num_leaves,
+                                                       str(treedef))
+            except CheckpointError as e:
+                failures.append(str(e))
+                continue
+            if failures:
+                print(f"checkpoint: fell back to step {s} after skipping "
+                      f"{len(failures)} unverifiable checkpoint(s): "
+                      + " | ".join(failures), flush=True)
+            return (jax.tree.unflatten(treedef, leaves), manifest["extras"],
+                    s)
+        raise CheckpointError(
+            f"no verifiable checkpoint in {self.dir}: " + " | ".join(failures))
+
+    def _load_verified(self, step: int, num_target_leaves: Optional[int],
+                       target_treedef: Optional[str]) -> tuple[list, dict]:
+        """Load + verify one checkpoint's leaves; CheckpointError on any
+        missing/truncated/corrupt leaf or structural mismatch."""
+        path = self.dir / f"step_{step:010d}"
+        if not path.is_dir():
+            raise CheckpointError(f"checkpoint step {step} not found "
+                                  f"({path})")
+        try:
+            manifest = json.loads((path / "manifest.json").read_text())
+        except FileNotFoundError:
+            raise CheckpointError(
+                f"checkpoint step {step}: manifest.json missing") from None
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise CheckpointError(
+                f"checkpoint step {step}: unreadable manifest.json "
+                f"({e})") from None
+        n = manifest.get("num_leaves")
+        if not isinstance(n, int) or n < 0:
+            raise CheckpointError(
+                f"checkpoint step {step}: invalid num_leaves {n!r}")
+        if num_target_leaves is not None and n != num_target_leaves:
+            raise CheckpointError(
+                f"checkpoint step {step} holds {n} leaves but the target "
+                f"tree expects {num_target_leaves} — wrong tree structure?")
+        if target_treedef is not None and \
+                manifest.get("treedef") not in (None, target_treedef):
+            raise CheckpointError(
+                f"checkpoint step {step}: tree structure mismatch "
+                f"(saved {manifest.get('treedef')!r}, "
+                f"target {target_treedef!r})")
+        leaf_meta = manifest.get("leaves")   # absent in format-1 manifests
+        if leaf_meta is not None and len(leaf_meta) != n:
+            raise CheckpointError(
+                f"checkpoint step {step}: manifest lists {len(leaf_meta)} "
+                f"leaf records for num_leaves={n}")
+        leaves = []
+        for i in range(n):
+            f = path / f"arr_{i}.npy"
+            if not f.exists():
+                raise CheckpointError(
+                    f"checkpoint step {step}: missing leaf file {f.name} "
+                    f"(have {n} leaves in the manifest)")
+            try:
+                arr = np.load(f)
+            except Exception as e:   # truncated/corrupt npy headers vary
+                raise CheckpointError(
+                    f"checkpoint step {step}: leaf {f.name} unreadable "
+                    f"(truncated?): {e}") from None
+            if leaf_meta is not None:
+                m = leaf_meta[i]
+                if list(arr.shape) != list(m["shape"]) or \
+                        str(arr.dtype) != m["dtype"]:
+                    raise CheckpointError(
+                        f"checkpoint step {step}: leaf {f.name} is "
+                        f"{arr.dtype}{list(arr.shape)}, manifest says "
+                        f"{m['dtype']}{m['shape']}")
+                if _crc(arr) != m["crc32"]:
+                    raise CheckpointError(
+                        f"checkpoint step {step}: leaf {f.name} checksum "
+                        f"mismatch (corrupt data)")
+            leaves.append(arr)
+        return leaves, manifest
 
 
 def reshard(tree: Any, shardings: Any) -> Any:

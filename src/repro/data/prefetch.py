@@ -24,7 +24,7 @@ import queue
 import threading
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
-from typing import Iterator, Optional
+from typing import Callable, Iterator, Optional
 
 
 class _Done:
@@ -209,7 +209,8 @@ class SubgraphPipeline:
     def __init__(self, sampler, *, backend: str = "segment", depth: int = 2,
                  workers: int = 2, recycle: int = 1, mode: str = "uniform",
                  start_step: int = 0, num_steps: Optional[int] = None,
-                 ell_buckets=(8, 32, 128)):
+                 ell_buckets=(8, 32, 128),
+                 build_hook: Optional[Callable[[int], None]] = None):
         """Configure and (for ``depth >= 1``) start the background pipeline.
 
         Args:
@@ -229,6 +230,12 @@ class SubgraphPipeline:
                 recycle``, mid-recycle-window offsets included).
             num_steps: stop after this many yields (``None`` = unbounded).
             ell_buckets: ELL degree-bucket sizes for ``backend="ell"``.
+            build_hook: optional ``hook(slot)`` invoked (on the building
+                thread) before each slot is built — the fault-injection
+                seam (``train.health.FaultPlan.pipeline_hook``): raising
+                here surfaces at that slot's position in the stream like
+                any worker exception, and the consumer can rebuild the
+                pipeline at the same step for a deterministic retry.
         """
         if depth < 0:
             raise ValueError(f"depth must be >= 0, got {depth}")
@@ -245,6 +252,7 @@ class SubgraphPipeline:
         self.recycle = int(recycle)
         self.mode = mode
         self.ell_buckets = ell_buckets
+        self.build_hook = build_hook
         self._step = int(start_step)
         self._end_step = None if num_steps is None else self._step + int(num_steps)
         self._cur_slot = -1
@@ -267,6 +275,8 @@ class SubgraphPipeline:
     def _build_host(self, slot: int):
         """Worker-side: schedule slot -> host (numpy) Batch. Pure numpy."""
         from repro.core.lmc import host_batch
+        if self.build_hook is not None:
+            self.build_hook(slot)
         cids = self.sampler.clusters_at(slot, mode=self.mode)
         sg = self.sampler.build_batch(cids)
         return host_batch(sg, backend=self.backend,

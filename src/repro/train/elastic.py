@@ -16,13 +16,19 @@ from repro.graph.partition import partition_graph
 
 def rescale_lmc_state(graph, store: HistoricalState, *,
                       old_num_parts: int, new_num_parts: int, seed: int = 0,
-                      reuse_store: bool = True
+                      reuse_store: bool = True, guard=None
                       ) -> tuple[ClusterSampler, HistoricalState]:
     """Re-partition for a new device count and carry (or reset) the stores.
 
     The historical values are per-*node*, so they survive a re-partition
     unchanged when `reuse_store` (partition only changes which rows are
     updated together); resetting them is also sound (Thm 2).
+
+    ``guard`` (a ``train.health.HealthGuard``, optional) keeps the Thm-2
+    staleness accounting honest across the rescale: a reused store carries
+    its counters (row ages are unchanged by re-partitioning), while a cold
+    reinit zeroes them (every row is byte-fresh — the transient bias of the
+    reset is what decays as ρ^k, not row staleness).
     """
     parts = partition_graph(graph, new_num_parts, seed=seed)
     sampler = ClusterSampler(graph, new_num_parts, parts=parts, seed=seed)
@@ -31,4 +37,6 @@ def rescale_lmc_state(graph, store: HistoricalState, *,
     else:
         L, _, d = store.h.shape
         new_store = init_history(L, graph.num_nodes, d)
+        if guard is not None:
+            guard.reset_staleness()
     return sampler, new_store

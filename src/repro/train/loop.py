@@ -1,10 +1,23 @@
-"""Fault-tolerant training loop for the paper's workload (GNN + LMC).
+"""Fault-tolerant, health-supervised training loop (GNN + LMC).
 
-Production behaviors implemented (and tested in tests/test_fault_tolerance.py):
+Production behaviors implemented (tests: test_fault_tolerance.py,
+test_supervisor.py):
   * periodic atomic checkpoints of (params, opt state, historical stores,
-    sampler RNG state, step counter);
-  * crash/preemption recovery: on failure the loop restores the latest
-    checkpoint and continues — the FailureInjector simulates preemptions;
+    sampler RNG state, lr, step counter) — synchronous or, with
+    ``async_ckpt=True``, written on a background thread off the hot path;
+  * crash/preemption recovery: on failure the loop restores the newest
+    *verifiable* checkpoint and continues (a corrupt/truncated latest
+    checkpoint falls back to the previous one — checkpoint.CheckpointError);
+  * numerical-health supervision (``health=HealthConfig(...)``): every step
+    is checked for NaN/Inf loss/grad-norm, loss spikes against a rolling
+    baseline, and (periodically) store corruption *before* its update is
+    applied; a divergent step triggers the configured policy — rollback to
+    the last good checkpoint (bounded by ``max_retries``, optional
+    lr-backoff) or skip-batch — and per-layer store-staleness counters
+    enforce Thm 2's ρ-budget (DESIGN.md §10);
+  * layered fault injection (``train.health.FaultPlan``): preemptions,
+    pipeline-worker crashes, mid-save checkpoint failures and NaN-poisoned
+    batches all recover to a stream-deterministic resume;
   * straggler mitigation: a per-step deadline (k × running-median step time);
     a straggler step's *store updates* can be dropped without violating LMC's
     convergence assumptions (staleness is bounded by Thm 2's ρ-term — see
@@ -28,48 +41,50 @@ legacy synchronous, stateful-RNG path byte-for-byte.
 from __future__ import annotations
 
 import time
+from collections import deque
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointError, CheckpointManager
 from repro.core import (HistoricalState, MBMethod, from_graph, accuracy,
                         init_history, make_train_step, to_device_batch)
 from repro.data.prefetch import SubgraphPipeline
 from repro.graph import ClusterSampler
 from repro.models.gnn import GNN
 from repro.optim.optimizers import Optimizer
+from repro.train.health import (FailureInjector, FaultPlan, HealthConfig,
+                                HealthGuard, PipelineFault,
+                                SimulatedPreemption, TrainingDivergedError)
+
+# running-median straggler baseline: bounded so the median scan stays O(1)
+# in run length (satellite of DESIGN.md §10; was an unbounded list)
+_STEP_TIME_WINDOW = 512
 
 
-class FailureInjector:
-    """Deterministic simulated preemptions for fault-tolerance tests."""
-
-    def __init__(self, fail_at_steps: tuple = ()):  # global step indices
-        self.fail_at = set(fail_at_steps)
-        self.fired: set = set()
-
-    def maybe_fail(self, step: int) -> None:
-        if step in self.fail_at and step not in self.fired:
-            self.fired.add(step)
-            raise RuntimeError(f"simulated preemption at step {step}")
+class _Divergence(RuntimeError):
+    """Internal: a step failed its health check before being applied."""
 
 
 class GNNTrainer:
     """Orchestrates sampling, the jit'd LMC step, optimizer updates,
-    checkpointing and fault handling for one training run.
+    checkpointing, health supervision and fault handling for one run.
 
     Not thread-safe: one trainer per (single) training thread; background
-    work (batch construction) is delegated to ``SubgraphPipeline`` workers
-    when ``prefetch``/``recycle`` are set. Call :meth:`close` (or drop the
-    trainer) to stop those workers.
+    work (batch construction, async checkpoint writes) is delegated to
+    ``SubgraphPipeline`` workers / the ``CheckpointManager`` writer thread.
+    Call :meth:`close` (or drop the trainer) to stop those workers.
     """
 
     def __init__(self, gnn: GNN, method: MBMethod, graph, sampler: ClusterSampler,
                  optimizer: Optimizer, *, ckpt_dir: Optional[str] = None,
                  ckpt_every: int = 50, seed: int = 0,
-                 failure_injector: Optional[FailureInjector] = None,
+                 failure_injector: Optional[FaultPlan] = None,
+                 health: Optional[HealthConfig] = None,
+                 max_retries: int = 3,
+                 async_ckpt: bool = False,
                  straggler_deadline: float = 4.0,
                  straggler_policy: str = "skip-store",
                  backend: str = "segment",
@@ -86,7 +101,20 @@ class GNNTrainer:
                 cluster sampler and the optimizer.
             ckpt_dir / ckpt_every: enable periodic atomic checkpoints.
             seed: parameter-init PRNG seed.
-            failure_injector: deterministic simulated preemptions (tests).
+            failure_injector: a ``train.health.FaultPlan`` scheduling any
+                mix of injected faults (preemptions, pipeline-worker
+                crashes, mid-save checkpoint failures, NaN batches); the
+                legacy ``FailureInjector`` is a preemption-only FaultPlan.
+            health: enable the numerical-health guard with this config
+                (``HealthConfig()`` for defaults); None disables all
+                health checks (the pre-supervisor hot path).
+            max_retries: recovery budget — consecutive recovery actions
+                (rollbacks / skipped batches / pipeline rebuilds) allowed
+                without an intervening healthy step before the run aborts
+                with ``TrainingDivergedError``.
+            async_ckpt: write checkpoints on a background thread (the hot
+                path only pays the device→host snapshot; files are
+                byte-identical to synchronous saves).
             straggler_deadline / straggler_policy: per-step deadline as a
                 multiple of the running-median step time; ``"skip-store"``
                 drops a straggler step's store update (Thm 2-safe).
@@ -118,6 +146,8 @@ class GNNTrainer:
         self.stream = stream    # HBM→VMEM DMA gather knob (None: autodetect)
         if recycle < 1:
             raise ValueError(f"recycle must be >= 1, got {recycle}")
+        if max_retries < 1:
+            raise ValueError(f"max_retries must be >= 1, got {max_retries}")
         self.prefetch = prefetch
         self.recycle = int(recycle)
         self.pipeline_workers = int(pipeline_workers)
@@ -128,20 +158,30 @@ class GNNTrainer:
         self._pipeline: Optional[SubgraphPipeline] = None
 
         self.params = gnn.init_params(jax.random.key(seed))
-        pspec = jax.eval_shape(lambda: self.params)  # shapes only
         self.opt_state = optimizer.init(self.params, _as_pspec_tree(self.params))
         self.store = init_history(gnn.num_layers, graph.num_nodes,
                                   gnn.hidden_dim)
         self.step_num = 0
-        # no buffer donation: the straggler skip-store policy and elastic
-        # rescale both need the pre-step store to stay alive
+        self.lr = float(optimizer.lr)   # mutable: rollback lr-backoff
+        # no buffer donation: the straggler skip-store policy, health
+        # rollback and elastic rescale all need the pre-step state alive
         self._step = jax.jit(make_train_step(gnn, method, graph.num_nodes,
                                              backend=backend, stream=stream))
+        # lr rides as a traced array argument so backoff never retraces
         self._update = jax.jit(
-            lambda g, s, p: optimizer.update(g, s, p, optimizer.lr))
-        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+            lambda g, s, p, lr: optimizer.update(g, s, p, lr))
+        fault_hook = (failure_injector.ckpt_hook
+                      if isinstance(failure_injector, FaultPlan) else None)
+        self.ckpt = (CheckpointManager(ckpt_dir, fault_hook=fault_hook)
+                     if ckpt_dir else None)
         self.ckpt_every = ckpt_every
-        self._step_times: list[float] = []
+        self.async_ckpt = bool(async_ckpt)
+        self.health = health
+        self.guard = (HealthGuard(health, gnn.num_layers, graph.num_nodes)
+                      if health is not None else None)
+        self.max_retries = int(max_retries)
+        self._retries_left = self.max_retries
+        self._step_times: deque[float] = deque(maxlen=_STEP_TIME_WINDOW)
         self.history: list[dict] = []
 
     # ----------------------------------------------------------------- state
@@ -150,28 +190,49 @@ class GNNTrainer:
                 "store": tuple(self.store)}
 
     def save(self) -> None:
-        """Write an atomic checkpoint (params/opt/stores/sampler RNG/step)."""
+        """Write an atomic checkpoint (params/opt/stores/sampler RNG/lr/step).
+
+        With ``async_ckpt`` the write happens on the manager's background
+        thread; this call only pays the device→host snapshot. A failed
+        write (injected or real) surfaces as OSError here — the caller's
+        recovery is simply to keep training, since the atomic publication
+        protocol leaves the previous checkpoint intact.
+        """
         if self.ckpt is None:
             return
-        extras = {"step": self.step_num,
+        extras = {"step": self.step_num, "lr": self.lr,
                   "sampler": _jsonable(self.sampler.state_dict())}
-        self.ckpt.save(self.step_num, self._state_tree(), extras)
+        self.ckpt.save(self.step_num, self._state_tree(), extras,
+                       background=self.async_ckpt)
 
     def restore(self) -> bool:
-        """Restore the latest checkpoint; returns False when none exists.
+        """Restore the newest verifiable checkpoint; False when none exists.
 
-        Also discards any in-flight batch pipeline: the stream is a pure
-        function of the step index, so rebuilding it at the restored step
-        replays exactly the batches the uninterrupted run would have seen.
+        Corrupt/truncated checkpoints are skipped (checkpoint.manager walks
+        newest-first with per-leaf checksum verification). Also discards any
+        in-flight batch pipeline: the stream is a pure function of the step
+        index, so rebuilding it at the restored step replays exactly the
+        batches the uninterrupted run would have seen.
         """
         if self.ckpt is None or self.ckpt.latest_step() is None:
             return False
-        tree, extras, step = self.ckpt.restore(self._state_tree())
+        try:
+            tree, extras, step = self.ckpt.restore(self._state_tree())
+        except CheckpointError as e:
+            # no verifiable checkpoint at all: report and start clean
+            self.history.append({"step": self.step_num,
+                                 "event": "restore-failed", "error": str(e)})
+            return False
         self.params = tree["params"]
         self.opt_state = tree["opt"]
         self.store = HistoricalState(*tree["store"])
         self.step_num = extras["step"]
+        self.lr = float(extras.get("lr", self.lr))
         self.sampler.load_state_dict(_from_jsonable(extras["sampler"]))
+        if self.guard is not None:
+            # counters don't ride the checkpoint: restart conservative (all
+            # rows fresh-at-restore; true staleness is ≤ checkpoint interval)
+            self.guard.reset_staleness()
         self._reset_pipeline()
         return True
 
@@ -179,11 +240,14 @@ class GNNTrainer:
     def _batch_pipeline(self) -> SubgraphPipeline:
         """The async batch source, (re)built lazily at the current step."""
         if self._pipeline is None:
+            hook = (self.failure_injector.pipeline_hook
+                    if isinstance(self.failure_injector, FaultPlan) else None)
             self._pipeline = SubgraphPipeline(
                 self.sampler, backend=self.backend,
                 depth=self.prefetch if self.prefetch is not None else 0,
                 workers=self.pipeline_workers, recycle=self.recycle,
-                mode=self.pipeline_mode, start_step=self.step_num)
+                mode=self.pipeline_mode, start_step=self.step_num,
+                build_hook=hook)
         return self._pipeline
 
     def _reset_pipeline(self) -> None:
@@ -193,24 +257,40 @@ class GNNTrainer:
             self._pipeline = None
 
     def close(self) -> None:
-        """Stop background pipeline workers (idempotent)."""
+        """Stop background pipeline workers + checkpoint writer (idempotent)."""
         self._reset_pipeline()
+        if self.ckpt is not None:
+            self.ckpt.close()
 
     # ------------------------------------------------------------------ run
     def run(self, num_steps: int, *, eval_every: int = 0) -> list[dict]:
         """Train for ``num_steps`` more steps; returns the history list.
 
-        Handles simulated preemptions by restoring the latest checkpoint and
-        continuing (the batch pipeline, when in use, is rebuilt at the
-        restored step so the resumed stream is identical).
+        The supervisor loop: every fault class recovers here without
+        operator intervention —
+
+        * simulated preemption → restore the newest verifiable checkpoint
+          and continue (the batch pipeline is rebuilt at the restored step,
+          so the resumed stream is identical to an uninterrupted run);
+        * pipeline-worker crash → rebuild the pipeline at the current step
+          and retry the same slot (stream is slot-indexed, so the retry
+          fetches the identical batch);
+        * divergent step (NaN/Inf/spike, from the health guard) → policy
+          ``"rollback"`` (restore + optional lr-backoff) or ``"skip-batch"``
+          (drop the poisoned update, advance);
+        * checkpoint-write failure → record and continue; the previous
+          checkpoint is still intact (atomic publication).
+
+        Consecutive recoveries are bounded by ``max_retries`` — when the
+        budget is exhausted without a healthy step in between, the run
+        aborts with :class:`TrainingDivergedError` rather than live-locking.
         """
         target = self.step_num + num_steps
         while self.step_num < target:
             try:
                 self._one_step()
-            except RuntimeError as e:
-                if "simulated preemption" not in str(e):
-                    raise
+                self._retries_left = self.max_retries  # healthy step: reset
+            except SimulatedPreemption:
                 # crash recovery: restore last checkpoint and continue; a
                 # failed restore still discards the pipeline so the aborted
                 # step's already-consumed batch is re-fetched, not skipped
@@ -221,40 +301,120 @@ class GNNTrainer:
                                      "event": "preemption",
                                      "restored": restored})
                 continue
+            except PipelineFault as e:
+                self._spend_retry(f"pipeline fault: {e}")
+                self._reset_pipeline()   # rebuild at step_num: same slot
+                self.history.append({"step": self.step_num,
+                                     "event": "pipeline-fault",
+                                     "error": str(e)})
+                continue
+            except _Divergence as e:
+                self._spend_retry(f"divergence: {e}")
+                self._recover_divergence(str(e))
+                continue
             if self.ckpt and self.step_num % self.ckpt_every == 0:
-                self.save()
+                try:
+                    self.save()
+                except OSError as e:   # includes injected CheckpointWriteFault
+                    self.history.append({"step": self.step_num,
+                                         "event": "ckpt-write-failed",
+                                         "error": str(e)})
             if eval_every and self.step_num % eval_every == 0:
                 self.history.append({"step": self.step_num,
                                      "val_acc": float(self.eval("val"))})
         return self.history
 
+    def _spend_retry(self, reason: str) -> None:
+        """Consume one unit of the recovery budget or abort the run."""
+        self._retries_left -= 1
+        if self._retries_left < 0:
+            raise TrainingDivergedError(
+                f"recovery budget exhausted ({self.max_retries} retries) "
+                f"at step {self.step_num}; last incident: {reason}")
+
+    def _recover_divergence(self, reason: str) -> None:
+        """Execute the health policy for a rejected (never-applied) step."""
+        policy = self.health.policy if self.health else "skip-batch"
+        if policy == "rollback":
+            restored = self.restore()
+            if restored:
+                if self.health.lr_backoff < 1.0:
+                    self.lr *= self.health.lr_backoff
+                self.history.append({"step": self.step_num,
+                                     "event": "health-rollback",
+                                     "reason": reason, "lr": self.lr})
+                return
+            # nothing verifiable to roll back to: degrade to skip-batch
+        # skip-batch: the poisoned update was never applied; advance past
+        # the consumed batch (legacy path: the sampler RNG already moved)
+        self.step_num += 1
+        if self.guard is not None:
+            # the store kept its old rows — every row ages one step
+            self.guard.staleness += 1
+        self.history.append({"step": self.step_num,
+                             "event": "health-skip-batch", "reason": reason,
+                             "policy": policy})
+
     def _one_step(self) -> None:
         t0 = time.time()
         if self._use_pipeline:
-            batch = next(self._batch_pipeline())
+            batch = next(self._batch_pipeline())   # may raise PipelineFault
         else:
             sg = self.sampler.sample()
             batch = to_device_batch(sg, backend=self.backend)
         if self.failure_injector is not None:
             self.failure_injector.maybe_fail(self.step_num)
+            if isinstance(self.failure_injector, FaultPlan):
+                batch = self.failure_injector.corrupt_batch(self.step_num,
+                                                            batch)
         loss, grads, new_store, metrics = self._step(
             self.params, self.store, batch, self.data.x, self.data.self_w)
-        self.params, self.opt_state, gnorm = self._update(
-            grads, self.opt_state, self.params)
+        new_params, new_opt, gnorm = self._update(
+            grads, self.opt_state, self.params, jnp.float32(self.lr))
+        lossf, gnormf = float(loss), float(gnorm)
+
+        # ---- health gate: nothing below is applied if this step diverged
+        if self.guard is not None:
+            reason = self.guard.check_step(lossf, gnormf)
+            if reason is None and self.guard.store_check_due(self.step_num):
+                reason = self.guard.check_store(
+                    HistoricalState(*new_store)
+                    if not isinstance(new_store, HistoricalState)
+                    else new_store)
+            if reason is not None:
+                raise _Divergence(reason)
+
+        self.params, self.opt_state = new_params, new_opt
         dt = time.time() - t0
         # straggler mitigation: drop the (stale-tolerant) store update when
         # this step blew its deadline, so the next step isn't gated on it
         med = float(np.median(self._step_times)) if self._step_times else dt
         is_straggler = (len(self._step_times) >= 8
                         and dt > self.straggler_deadline * med)
-        if not (is_straggler and self.straggler_policy == "skip-store"):
+        store_updated = not (is_straggler
+                             and self.straggler_policy == "skip-store")
+        if store_updated:
             self.store = new_store
+        rec = {"step": self.step_num + 1, "loss": lossf,
+               "train_acc": float(metrics["train_acc"]),
+               "grad_norm": gnormf, "time_s": dt,
+               "straggler": bool(is_straggler)}
+        if self.guard is not None:
+            self.guard.observe(lossf)
+            # one fused device->host transfer for the staleness bookkeeping
+            # (4 separate np.asarray syncs measurably inflate the step)
+            bg, bm, hg, hm = jax.device_get(
+                (batch.batch_gids, batch.batch_mask,
+                 batch.halo_gids, batch.halo_mask))
+            halo_stale = self.guard.halo_staleness(hg, hm)
+            self.guard.tick(bg, bm, store_updated)
+            rec["halo_staleness"] = halo_stale
+            rho_msg = self.guard.check_rho_budget(halo_stale)
+            if rho_msg is not None:
+                rec["staleness_violation"] = rho_msg
         self._step_times.append(dt)
         self.step_num += 1
-        self.history.append({"step": self.step_num, "loss": float(loss),
-                             "train_acc": float(metrics["train_acc"]),
-                             "grad_norm": float(gnorm),
-                             "time_s": dt, "straggler": bool(is_straggler)})
+        self.history.append(rec)
 
     # ----------------------------------------------------------------- eval
     def eval(self, split: str = "val") -> float:
