@@ -1,0 +1,186 @@
+"""Backend head-to-head (ISSUE 9) -> BENCH_backends.json.
+
+Races the three aggregation/compensation backends of ``make_train_step``
+through the same sampler stream on the synthetic benchmark graph:
+
+* ``segment`` — jnp segment-sum aggregation + store gather/lerp compensation;
+* ``ell``     — Pallas bucketed-ELL SpMM + fused ``lmc_compensate`` kernel;
+* ``ti``      — same Pallas SpMM, but the store-free message-invariance
+                compensation (DESIGN.md §11): an elementwise α-rescale of the
+                in-batch fresh values, zero historical-store reads or writes.
+
+Per backend the artifact records:
+
+* ``us_per_call``        — best-of-iters jitted step time over a fixed epoch
+                           of prebuilt device batches (same protocol as the
+                           kernel micro-benchmarks);
+* ``loss_mid`` / ``loss_final`` — SGD training loss at the halfway point and
+                           the mean over the last 10 of ``steps`` steps, all
+                           backends from identical params/sampler streams
+                           (the convergence head-to-head);
+* ``store_read_bytes_per_step`` / ``store_write_bytes_per_step`` — analytic
+                           historical-store traffic: LMC gathers NH store
+                           rows per layer in both directions ((2L-1) reads)
+                           and refreshes NB rows ((2L-1) writes); ti moves
+                           zero store bytes and only touches the (NH,) α
+                           vector per compensation site.
+
+``ti_vs_ell`` carries the two cross-backend tripwires `scripts/check.sh`
+gates: ``step_ratio`` (ti does strictly less memory traffic than ell, so its
+step must stay <= 1.0x) and ``loss_rel_gap`` (terminal-loss agreement;
+``gate`` marks full-fidelity runs — fast runs record it without enforcing).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_backends [--fast]`` or via
+``python -m benchmarks.run --only backends``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments" / "bench"
+
+CFG = dict(preset="ppi-cpu", hidden=64, layers=3, parts=16, c=2, lr=0.2)
+_METHOD_OF = {"segment": "lmc", "ell": "lmc", "ti": "ti"}
+
+
+def _timer(fn, iters=3):
+    """Best-of-iters per-call time in us (see benchmarks/run.py)."""
+    fn()  # warmup/compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best * 1e6
+
+
+def _store_bytes(backend, method, sg, layers: int,
+                 hidden: int) -> tuple[int, int]:
+    """Analytic per-step historical-store traffic (bytes read, written).
+
+    There are ``2L-1`` compensation sites (L forward, L-1 backward); a
+    store-reading backend gathers NH d-wide f32 rows at each (backend="ti"
+    substitutes the in-batch α-rescale and reads nothing), and a
+    store-writing method scatters NB rows back at each.
+    """
+    sites = 2 * layers - 1
+    reads = sites * sg.n_halo * hidden * 4 \
+        if backend != "ti" and method.fwd_mode in ("lmc", "historical") else 0
+    writes = sites * sg.n_batch * hidden * 4 if method.store_writes else 0
+    return reads, writes
+
+
+def bench_backends(fast: bool = False) -> dict:
+    import jax
+    from repro.core import (METHODS, from_graph, init_history,
+                            make_train_step, to_device_batch)
+    from repro.graph import ClusterSampler, make_sbm_dataset, partition_graph
+    from repro.models import make_gnn
+
+    g = make_sbm_dataset(CFG["preset"], seed=3)
+    parts = partition_graph(g, CFG["parts"], seed=0)
+    data = from_graph(g)
+    gnn = make_gnn("gcn", g.feature_dim, CFG["hidden"], g.num_classes,
+                   CFG["layers"])
+    params0 = gnn.init_params(jax.random.key(0))
+    steps = 40 if fast else 120
+    iters = 3 if fast else 5
+
+    backends = ("segment", "ell", "ti")
+    setup = {}
+    for backend in backends:
+        m = METHODS[_METHOD_OF[backend]]
+        s = ClusterSampler(g, CFG["parts"], CFG["c"], parts=parts, seed=1,
+                           stochastic=False)
+        step = jax.jit(make_train_step(gnn, m, g.num_nodes, backend=backend))
+        sgs = list(s.epoch())
+        batches = [to_device_batch(sg, backend=backend) for sg in sgs]
+        setup[backend] = (m, step, sgs, batches)
+
+    # ---- step time: interleaved rounds, min per backend ------------------
+    # Interleaving + best-of is what keeps the ti-vs-ell ratio meaningful on
+    # this interpret-mode CPU box, where a single epoch pass jitters by
+    # ~15% — far more than the compensate-kernel work ti removes.
+    def epoch_pass(backend):
+        m, step, _, batches = setup[backend]
+        store = init_history(gnn.num_layers, g.num_nodes, gnn.hidden_dim)
+        for b in batches:
+            _, _, store, _ = step(params0, store, b, data.x, data.self_w)
+        jax.block_until_ready(store.h)
+
+    best = {b: float("inf") for b in backends}
+    for b in backends:
+        epoch_pass(b)                       # warmup/compile
+    for _ in range(2 * iters):
+        for b in backends:
+            t0 = time.time()
+            epoch_pass(b)
+            best[b] = min(best[b], time.time() - t0)
+
+    rows = {}
+    for backend in backends:
+        m, step, sgs, batches = setup[backend]
+        us = best[backend] * 1e6 / len(batches)
+
+        # ---- convergence: `steps` SGD steps from identical init ----------
+        params = params0
+        store = init_history(gnn.num_layers, g.num_nodes, gnn.hidden_dim)
+        losses = []
+        while len(losses) < steps:
+            for b in batches:
+                if len(losses) >= steps:
+                    break
+                loss, grads, store, _ = step(params, store, b, data.x,
+                                             data.self_w)
+                params = jax.tree.map(lambda p, gr: p - CFG["lr"] * gr,
+                                      params, grads)
+                losses.append(float(loss))
+        loss_mid = float(np.mean(losses[steps // 2 - 5:steps // 2 + 5]))
+        loss_final = float(np.mean(losses[-10:]))
+
+        reads, writes = _store_bytes(backend, m, sgs[0], CFG["layers"],
+                                     CFG["hidden"])
+        rows[backend] = {
+            "us_per_call": us, "method": m.name,
+            "loss_mid": loss_mid, "loss_final": loss_final,
+            "store_read_bytes_per_step": reads,
+            "store_write_bytes_per_step": writes,
+        }
+        print(f"backends/{backend},{us:.0f},loss@{steps}={loss_final:.4f};"
+              f"store_rw_bytes={reads}+{writes}", flush=True)
+
+    gap = abs(rows["ti"]["loss_final"] - rows["ell"]["loss_final"]) \
+        / max(rows["ell"]["loss_final"], 1e-9)
+    ratio = rows["ti"]["us_per_call"] / max(rows["ell"]["us_per_call"], 1e-9)
+    rows["ti_vs_ell"] = {"step_ratio": ratio, "loss_rel_gap": gap,
+                         "steps": steps, "gate": not fast}
+    rows["ti"]["default_path"] = True   # the store-free production estimator
+    print(f"backends/ti_vs_ell,0,step_ratio={ratio:.2f};"
+          f"loss_gap={gap:.1%}", flush=True)
+    assert rows["ti"]["store_read_bytes_per_step"] == 0
+    assert rows["ti"]["store_write_bytes_per_step"] == 0
+    return rows
+
+
+def main() -> None:
+    import jax
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+    rows = bench_backends(fast=args.fast)
+    artifact = {"name": "backends", "backend": jax.default_backend(),
+                "agg_backend": "all", "rows": rows}
+    path = OUT / "BENCH_backends.json"
+    path.write_text(json.dumps(artifact, indent=2, sort_keys=True))
+    print(f"# wrote {path.relative_to(ROOT)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,10 @@ Paper mapping (DESIGN.md §6):
   bench_supervisor            -> training-supervisor overhead (DESIGN.md
                                  §10): guarded-vs-unguarded step medians,
                                  sync-vs-async checkpoint save cost
+  bench_backends              -> segment vs ell vs ti head-to-head
+                                 (DESIGN.md §11): convergence at fixed step
+                                 counts + per-step historical-store traffic;
+                                 the ti step must stay <= 1.0x the ell step
 """
 from __future__ import annotations
 
@@ -438,6 +442,7 @@ def bench_compensate(fast=False):
     return rows
 
 
+from benchmarks.bench_backends import bench_backends  # noqa: E402
 from benchmarks.bench_pipeline import bench_pipeline  # noqa: E402
 from benchmarks.bench_supervisor import bench_supervisor  # noqa: E402
 
@@ -453,6 +458,7 @@ BENCHES = {
     "compensate": bench_compensate,
     "pipeline": bench_pipeline,
     "supervisor": bench_supervisor,
+    "backends": bench_backends,
 }
 
 
@@ -463,7 +469,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--backend", default="segment",
-                    choices=["segment", "ell"],
+                    choices=["segment", "ell", "ti"],
                     help="aggregation hot path for train-step benches")
     args = ap.parse_args()
     OUT.mkdir(parents=True, exist_ok=True)

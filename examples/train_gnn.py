@@ -7,6 +7,9 @@ onto.
     PYTHONPATH=src python examples/train_gnn.py --preset arxiv-like   # 169k nodes
     PYTHONPATH=src python examples/train_gnn.py --backend ell  # Pallas SpMM/
         # compensate kernels on the hot path (compiled on TPU, interpreted on CPU)
+    PYTHONPATH=src python examples/train_gnn.py --backend ti
+        # store-free message-invariance compensation (zero historical-store
+        # reads/writes on the hot path; DESIGN.md §11)
     PYTHONPATH=src python examples/train_gnn.py --prefetch 4 --recycle 4
         # async sampling pipeline + minibatch recycling (DESIGN.md §9)
     PYTHONPATH=src python examples/train_gnn.py --no-prefetch
@@ -39,9 +42,10 @@ def main():
     ap.add_argument("--arch", default="gcnii", choices=["gcn", "gcnii",
                                                         "sage", "gin"],
                     help="GNN architecture")
-    ap.add_argument("--method", default="lmc", choices=list(METHODS),
-                    help="mini-batch method: lmc, gas, cluster, or the "
-                         "compensation ablations")
+    ap.add_argument("--method", default=None, choices=list(METHODS),
+                    help="mini-batch method: lmc, gas, cluster, ti, or the "
+                         "compensation ablations (default: ti when "
+                         "--backend ti, else lmc)")
     ap.add_argument("--hidden", type=int, default=128,
                     help="hidden width of every GNN layer")
     ap.add_argument("--layers", type=int, default=4,
@@ -50,10 +54,14 @@ def main():
                     help="graph partition count B (clusters)")
     ap.add_argument("--clusters-per-batch", type=int, default=4,
                     help="clusters c sampled per mini-batch (Alg. 1 line 4)")
-    ap.add_argument("--backend", default="segment", choices=["segment", "ell"],
-                    help="aggregation hot path: jnp segment-sum or the Pallas "
-                         "bucketed-ELL SpMM/compensate kernels (compiled on "
-                         "TPU, interpreter fallback on CPU)")
+    ap.add_argument("--backend", default="segment",
+                    choices=["segment", "ell", "ti"],
+                    help="aggregation/compensation hot path: jnp segment-sum, "
+                         "the Pallas bucketed-ELL SpMM/compensate kernels "
+                         "(compiled on TPU, interpreter fallback on CPU), or "
+                         "ti = ELL aggregation + store-free message-"
+                         "invariance compensation (zero historical-store "
+                         "reads; DESIGN.md §11)")
     ap.add_argument("--stream", default=None, action="store_true",
                     help="force the HBM→VMEM double-buffered DMA gather in "
                          "the ell-backend kernels (default: autodetect = "
@@ -111,6 +119,8 @@ def main():
     print(f"[{time.time()-t0:6.1f}s] graph {g.num_nodes}n/{g.num_edges}e, "
           f"partitioned into {args.parts}")
 
+    if args.method is None:
+        args.method = "ti" if args.backend == "ti" else "lmc"
     m = METHODS[args.method]
     gnn = make_gnn(args.arch, g.feature_dim, args.hidden, g.num_classes,
                    args.layers)

@@ -19,6 +19,12 @@
 # (BENCH_supervisor.json), and the fault-injection matrix (preemption /
 # pipeline-worker crash / mid-save ckpt failure / NaN batch, each recovering
 # to a stream-deterministic resume) runs in gate 1, before the full suite.
+# The backends benchmark (DESIGN.md §11) races segment/ell/ti through one
+# sampler stream and gates the store-free ti estimator: step time <= ell
+# (strict on compiled backends, jitter headroom under the CPU interpreter),
+# zero store bytes/step, and terminal-loss parity on full-fidelity runs.
+# scripts/coverage_gate.py enforces a line-coverage floor over
+# repro.core+repro.kernels before the benchmarks run.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -40,13 +46,19 @@ fi
 
 python -m pytest -x -q "$@"
 
+# coverage floor (DESIGN.md §11): line coverage of repro.core+repro.kernels
+# under the targeted numerics suites must stay >= the floor in
+# scripts/coverage_gate.py (stdlib settrace tracer — the container has no
+# coverage.py; the script upgrades itself automatically when one appears)
+python scripts/coverage_gate.py
+
 # snapshot the *committed* baselines (HEAD, not the working tree — the
 # benches below rewrite the working-tree files, and ratcheting against the
 # previous run would let a slow <1.3x-per-run regression through)
 BASE_DIR=$(mktemp -d)
 trap 'rm -rf "$BASE_DIR"' EXIT
 for f in experiments/bench/BENCH_spmm.json experiments/bench/BENCH_compensate.json \
-         experiments/bench/BENCH_pipeline.json; do
+         experiments/bench/BENCH_pipeline.json experiments/bench/BENCH_backends.json; do
     git show "HEAD:$f" > "$BASE_DIR/$(basename "$f")" 2>/dev/null \
         || rm -f "$BASE_DIR/$(basename "$f")"   # not committed yet: no gate
 done
@@ -55,6 +67,7 @@ python -m benchmarks.run --fast --only spmm_kernel
 python -m benchmarks.run --fast --only compensate
 python -m benchmarks.run --fast --only pipeline
 python -m benchmarks.run --fast --only supervisor
+python -m benchmarks.run --fast --only backends
 
 BASELINE_DIR="$BASE_DIR" python - <<'EOF'
 import json
@@ -141,4 +154,27 @@ assert sp >= 1.0, (
     f"should never cost the training thread more than synchronous ones")
 print(f"check OK: supervisor:ckpt_async_save {sp:.1f}x cheaper on the "
       f"hot path")
+
+# backend tripwires (DESIGN.md §11): ti removes every historical-store
+# read/write from the step, so it must never cost more than ell.  On a
+# compiled backend that bound is strict (1.0x); under the CPU interpreter
+# the Pallas SpMM dominates and single-epoch jitter (~±15%) swamps the
+# compensate traffic ti saves, so the CPU gate carries jitter headroom —
+# it still trips if ti systematically does *more* work than ell.
+bb = json.load(open("experiments/bench/BENCH_backends.json"))
+TI_RATIO_TOL = 1.0 if bb.get("backend") != "cpu" else 1.15
+tv = bb["rows"]["ti_vs_ell"]
+assert tv["step_ratio"] <= TI_RATIO_TOL, (
+    f"backends:ti step costs {tv['step_ratio']:.2f}x the ell step "
+    f"(bound {TI_RATIO_TOL}x on backend {bb.get('backend')!r})")
+print(f"check OK: backends:ti {tv['step_ratio']:.2f}x vs ell "
+      f"(bound {TI_RATIO_TOL}x)")
+for k in ("store_read_bytes_per_step", "store_write_bytes_per_step"):
+    assert bb["rows"]["ti"][k] == 0, f"backends:ti nonzero {k}"
+print("check OK: backends:ti store traffic 0+0 bytes/step")
+if tv.get("gate"):
+    assert tv["loss_rel_gap"] <= 0.05, (
+        f"backends:ti terminal loss diverges {tv['loss_rel_gap']:.1%} "
+        f"from ell at {tv['steps']} steps")
+    print(f"check OK: backends:ti_vs_ell loss gap {tv['loss_rel_gap']:.1%}")
 EOF

@@ -27,7 +27,7 @@ from repro.graph.structure import PaddedSubgraph
 from repro.kernels import ELLGraph, ell_from_coo, lmc_compensate
 from repro.models.gnn import GNN, EdgeList, LayerAux
 
-AGG_BACKENDS = ("segment", "ell")
+AGG_BACKENDS = ("segment", "ell", "ti")
 
 
 class Batch(NamedTuple):
@@ -36,7 +36,12 @@ class Batch(NamedTuple):
     ``ell`` (optional) carries the batch-local adjacency re-bucketed into the
     Pallas kernel's padded-ELL layout (built host-side by ``to_device_batch``
     with fixed per-bucket capacities, so every batch of a sampler shares one
-    jit trace); required by ``make_train_step(..., backend="ell")``.
+    jit trace); required by ``make_train_step(..., backend="ell"|"ti")``.
+
+    ``ti_scale`` (optional) carries the per-halo-row message-invariance
+    scales α (graph/structure.py builds them next to β); required by
+    ``backend="ti"``, whose compensation is α ⊙ fresh instead of a
+    historical-store gather (DESIGN.md §11).
     """
     batch_gids: jax.Array
     halo_gids: jax.Array
@@ -51,24 +56,35 @@ class Batch(NamedTuple):
     loss_scale: jax.Array
     grad_scale: jax.Array
     ell: Optional[ELLGraph] = None
+    ti_scale: Optional[jax.Array] = None
 
 
 def host_batch(sg: PaddedSubgraph, *, backend: str = "segment",
                ell_buckets=(8, 32, 128)) -> Batch:
     """Build a Batch of *host* (numpy) arrays, including the re-bucketed ELL
-    adjacency for ``backend="ell"`` — everything except the device transfer.
+    adjacency for ``backend="ell"|"ti"`` — everything except the device
+    transfer.
 
     This is the per-batch work the async pipeline runs on worker threads
     (pure numpy, no JAX calls, so workers never contend on device dispatch);
     the consumer moves the whole pytree over with one ``jax.device_put``
     (DESIGN.md §9). ``to_device_batch`` composes the two for the synchronous
-    path.
+    path. ``backend="ti"`` additionally rides the subgraph's α scales along
+    (the halo-compensation transform — no store state needed at step time).
     """
     assert backend in AGG_BACKENDS, backend
     ell = None
-    if backend == "ell":
+    ti_scale = None
+    if backend in ("ell", "ti"):
         ell = ell_from_coo(sg.edge_src, sg.edge_dst, sg.edge_w, sg.n_ext,
                            buckets=ell_buckets, as_jax=False)
+    if backend == "ti":
+        if sg.ti_scale is None:
+            raise ValueError(
+                'backend="ti" needs PaddedSubgraph.ti_scale; rebuild the '
+                "subgraph with graph.structure.build_subgraph (any sampler "
+                "batch has it)")
+        ti_scale = np.asarray(sg.ti_scale)
     return Batch(
         batch_gids=np.asarray(sg.batch_gids), halo_gids=np.asarray(sg.halo_gids),
         batch_mask=np.asarray(sg.batch_mask), halo_mask=np.asarray(sg.halo_mask),
@@ -76,7 +92,7 @@ def host_batch(sg: PaddedSubgraph, *, backend: str = "segment",
         edge_w=np.asarray(sg.edge_w), labels=np.asarray(sg.labels),
         labeled_mask=np.asarray(sg.labeled_mask), beta=np.asarray(sg.beta),
         loss_scale=np.asarray(sg.loss_scale), grad_scale=np.asarray(sg.grad_scale),
-        ell=ell)
+        ell=ell, ti_scale=ti_scale)
 
 
 def to_device_batch(sg: PaddedSubgraph, *, backend: str = "segment",
@@ -102,9 +118,10 @@ def _combine(mode: str, beta: jax.Array, hist: jax.Array, fresh: jax.Array,
     return out * mask
 
 
-def _compensate(mode: str, backend: str, store_l: jax.Array,
+def _compensate(mode: str, backend: str, store_l: Optional[jax.Array],
                 halo_gids: jax.Array, beta1d: jax.Array, fresh: jax.Array,
-                mask1d: jax.Array, stream: Optional[bool] = None) -> jax.Array:
+                mask1d: jax.Array, stream: Optional[bool] = None,
+                ti_scale: Optional[jax.Array] = None) -> jax.Array:
     """Halo compensation ĥ/V̂ (Eq. 9/12): gather the historical rows and
     convex-combine with the incomplete fresh values.
 
@@ -114,9 +131,22 @@ def _compensate(mode: str, backend: str, store_l: jax.Array,
     ``stream`` (default: autodetect) selects the HBM→VMEM DMA store gather —
     the store is *full-graph* here, so the streamed path is what lets the
     compiled kernel run at paper scale (DESIGN.md §3).
+
+    backend="ti": the message-invariance estimator (DESIGN.md §11) — the
+    historical row H̄_i is replaced by the message-invariant transform
+    α_i ⊙ h̃_i of the *in-batch* fresh value, so Eq. 9/12 collapse to an
+    elementwise rescale ``((1-β_eff)·α + β_eff) ⊙ fresh`` with the same
+    effective-β trick. No store read, no gather, no kernel: strictly less
+    memory traffic than either store-reading backend.
     """
     if mode == "none":
         return jnp.zeros_like(fresh)
+    if backend == "ti":
+        beta_eff = {"lmc": beta1d,
+                    "historical": jnp.zeros_like(beta1d),
+                    "fresh": jnp.ones_like(beta1d)}[mode]
+        coeff = (1.0 - beta_eff) * ti_scale + beta_eff
+        return fresh * (coeff * mask1d)[:, None]
     if backend == "ell":
         beta_eff = {"lmc": beta1d,
                     "historical": jnp.zeros_like(beta1d),
@@ -142,10 +172,16 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int, *,
     through the fused ``lmc_compensate`` kernel. The batch must then carry the
     bucketed adjacency (``to_device_batch(sg, backend="ell")``).
 
-    ``stream`` (ell backend only; default autodetect = streamed) selects the
+    ``stream`` (ell/ti backends; default autodetect = streamed) selects the
     HBM→VMEM double-buffered DMA gather in both kernels — required for
     full-graph historical stores on the compiled path; ``stream=False``
     forces the legacy resident VMEM gather blocks.
+
+    ``backend="ti"`` aggregates through the same Pallas SpMM but compensates
+    with the message-invariance estimator instead of historical rows
+    (DESIGN.md §11): the step performs *zero* reads of ``store.h``/``store.v``
+    and — under a ``store_writes=False`` method like ``methods.TI`` — zero
+    writes, returning the input store untouched.
     """
     method.validate()
     assert backend in AGG_BACKENDS, backend
@@ -155,10 +191,14 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int, *,
     def step(params: dict, store: HistoricalState, batch: Batch,
              x_full: jax.Array, self_w_full: jax.Array):
         nb = batch.batch_gids.shape[0]
-        if backend == "ell" and batch.ell is None:
+        if backend in ("ell", "ti") and batch.ell is None:
             raise ValueError(
-                'backend="ell" needs batch.ell; build the batch with '
-                'to_device_batch(sg, backend="ell")')
+                f'backend="{backend}" needs batch.ell; build the batch with '
+                f'to_device_batch(sg, backend="{backend}")')
+        if backend == "ti" and batch.ti_scale is None:
+            raise ValueError(
+                'backend="ti" needs batch.ti_scale; build the batch with '
+                'to_device_batch(sg, backend="ti")')
         # concat_rows (not jnp.concatenate): [batch | halo] row blocks must
         # keep explicit shardings under SPMD — see repro.dist.sharding
         ext_gids = concat_rows([batch.batch_gids, batch.halo_gids])
@@ -167,7 +207,7 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int, *,
         edges = EdgeList(batch.edge_src, batch.edge_dst, batch.edge_w)
         h0_ext = gnn.embed_apply(params["embed"], x_ext)
         aux = LayerAux(edges=edges, x=x_ext, h0=h0_ext, self_w=self_w_ext,
-                       ell=batch.ell if backend == "ell" else None,
+                       ell=batch.ell if backend in ("ell", "ti") else None,
                        stream=stream)
 
         bmask = batch.batch_mask[:, None]
@@ -181,11 +221,16 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int, *,
             residuals.append(h_in)
             h_out = gnn.layer_apply(gnn.layer_params(params, l), l, h_in, aux)
             h_bar_batch = h_out[:nb] * bmask
-            h_hat_halo = _compensate(method.fwd_mode, backend, new_h[l],
+            # ti never touches the store — don't even slice it (keeps the
+            # store inputs provably dead in the step's jaxpr)
+            h_hat_halo = _compensate(method.fwd_mode, backend,
+                                     None if backend == "ti" else new_h[l],
                                      batch.halo_gids, batch.beta, h_out[nb:],
-                                     batch.halo_mask, stream)
-            new_h = new_h.at[l].set(scatter_rows(
-                new_h[l], batch.batch_gids, batch.batch_mask, h_bar_batch, num_nodes))
+                                     batch.halo_mask, stream, batch.ti_scale)
+            if method.store_writes:
+                new_h = new_h.at[l].set(scatter_rows(
+                    new_h[l], batch.batch_gids, batch.batch_mask, h_bar_batch,
+                    num_nodes))
             h_in = concat_rows([h_bar_batch, h_hat_halo], axis=0)
 
         # ---------------- loss & top-layer adjoints (Eq. 6/14 + V^L init) ----
@@ -234,12 +279,14 @@ def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int, *,
             v0_acc = v0_acc + h0grad
             if l >= 1:
                 V_bar_next = hgrad[:nb] * bmask
-                V_hat = _compensate(method.bwd_mode, backend, new_v[l - 1],
+                V_hat = _compensate(method.bwd_mode, backend,
+                                    None if backend == "ti" else new_v[l - 1],
                                     batch.halo_gids, batch.beta, hgrad[nb:],
-                                    batch.halo_mask, stream)
-                new_v = new_v.at[l - 1].set(scatter_rows(
-                    new_v[l - 1], batch.batch_gids, batch.batch_mask,
-                    V_bar_next, num_nodes))
+                                    batch.halo_mask, stream, batch.ti_scale)
+                if method.store_writes:
+                    new_v = new_v.at[l - 1].set(scatter_rows(
+                        new_v[l - 1], batch.batch_gids, batch.batch_mask,
+                        V_bar_next, num_nodes))
                 V_bar = V_bar_next
             elif layer0_input_is_h0:
                 v0_acc = v0_acc + hgrad

@@ -1,4 +1,5 @@
-"""Mini-batch method space: LMC, GAS, Cluster-GCN and ablations as one config.
+"""Mini-batch method space: LMC, GAS, Cluster-GCN, TI and ablations as one
+config.
 
 The unified train step (core/lmc.py) is parameterized by how halo (1-hop
 out-of-batch) values are approximated in each direction:
@@ -11,6 +12,18 @@ out-of-batch) values are approximated in each direction:
    Cluster-GCN: sampler drops the halo entirely (include_halo=False)
    C_f-only   : fwd 'lmc',        bwd 'none'   (Fig. 4 ablation)
    C_b-only   : fwd 'historical', bwd 'lmc'
+   TI         : fwd 'lmc',        bwd 'lmc', store_writes=False — paired with
+                ``make_train_step(..., backend="ti")``, which substitutes the
+                message-invariant transform of in-batch messages for every
+                H̄/V̄ read (arXiv 2502.19693; DESIGN.md §11). The estimator
+                never reads the historical store, so the store refresh is
+                pure waste and the method switches it off.
+
+``store_writes`` controls the historical-store *refresh* path (the per-layer
+scatter of fresh in-batch rows into H̄/V̄). It is orthogonal to the modes:
+switching it off under a store-*reading* mode ('lmc'/'historical') freezes
+the store at its initial contents rather than erroring — useful for
+ablations, required for the store-free TI estimator.
 """
 from __future__ import annotations
 
@@ -24,6 +37,7 @@ class MBMethod:
     bwd_mode: str = "lmc"       # 'lmc' | 'none' | 'fresh'
     include_halo: bool = True   # sampler-level: False = Cluster-GCN view
     edge_weight_mode: str = "global"  # 'global' (GAS/LMC) | 'local' (Cluster)
+    store_writes: bool = True   # refresh H̄/V̄ batch rows each step
 
     def validate(self) -> None:
         assert self.fwd_mode in ("lmc", "historical", "fresh", "none")
@@ -38,5 +52,6 @@ CLUSTER = MBMethod("cluster", fwd_mode="none", bwd_mode="none",
                    include_halo=False, edge_weight_mode="local")
 CF_ONLY = MBMethod("cf_only", fwd_mode="lmc", bwd_mode="none")
 CB_ONLY = MBMethod("cb_only", fwd_mode="historical", bwd_mode="lmc")
+TI = MBMethod("ti", fwd_mode="lmc", bwd_mode="lmc", store_writes=False)
 
-METHODS = {m.name: m for m in (LMC, GAS, CLUSTER, CF_ONLY, CB_ONLY)}
+METHODS = {m.name: m for m in (LMC, GAS, CLUSTER, CF_ONLY, CB_ONLY, TI)}

@@ -216,8 +216,10 @@ class SubgraphPipeline:
         Args:
             sampler: a ``ClusterSampler`` (any object with ``clusters_at`` +
                 ``build_batch``); its schedule API must be thread-safe.
-            backend: ``"segment"`` or ``"ell"`` — whether workers also bucket
-                each batch's adjacency into the Pallas kernels' ELL layout.
+            backend: ``"segment"``, ``"ell"`` or ``"ti"`` — whether workers
+                also bucket each batch's adjacency into the Pallas kernels'
+                ELL layout (``"ti"`` additionally rides the subgraph's
+                message-invariance scales along; see core/lmc.host_batch).
             depth: prefetch queue depth. ``0`` disables all threading: the
                 synchronous fallback path, same stream (tiny graphs,
                 debugging). ``>= 1`` bounds host lookahead to

@@ -28,6 +28,14 @@ def _round_up(x: int, m: int) -> int:
     return ((int(x) + m - 1) // m) * m
 
 
+# Upper bound on the message-invariance scale α = W_tot/W_in (backend="ti").
+# α is the amplification applied to a halo node's in-subgraph messages; a node
+# that shares only a sliver of its incident weight with the subgraph would
+# otherwise amplify that sliver (and its noise) unboundedly. METIS-style
+# partitions keep most weight internal, so the clip is rarely active.
+TI_SCALE_CLIP = 32.0
+
+
 @dataclasses.dataclass
 class Graph:
     """Undirected graph in CSR form with features/labels/splits (host side)."""
@@ -122,6 +130,11 @@ class PaddedSubgraph:
     beta: np.ndarray         # (NH,) float32 convex combination coefficients
     loss_scale: np.ndarray   # () float32: b/(c*|V_L|)  (App. A.3.1, Eq. 14)
     grad_scale: np.ndarray   # () float32: b/c          (App. A.3.1, Eq. 15)
+    # (NH,) float32 message-invariance scales α_i = W_tot(i)/W_in(i): ratio of
+    # a halo node's full-graph incident GCN edge weight to its in-subgraph
+    # incident weight; 0 on padding rows. backend="ti" (DESIGN.md §11) uses
+    # α ⊙ fresh as the compensation estimate instead of a store gather.
+    ti_scale: np.ndarray = None
     # metadata (host only, not traced)
     n_batch_real: int = 0
     n_halo_real: int = 0
@@ -231,9 +244,28 @@ def build_subgraph(
         e2_dst_g = hdst[keep]
         halo_local_deg = np.bincount(
             np.searchsorted(halo_nodes, e2_dst_g), minlength=nh).astype(np.int64)
+        # message-invariance scales (backend="ti", DESIGN.md §11): per halo
+        # node, the ratio of its *full-graph* incident GCN edge weight to its
+        # *in-subgraph* incident weight. Always the global normalization —
+        # W_tot has no meaning under subgraph-local renormalization. W_in > 0
+        # for every real halo node (the batch neighbor that pulled it in is
+        # in the subgraph, and the graph is symmetric), and W_in ⊆ W_tot so
+        # α >= 1; the clip only bounds pathological fringe nodes whose
+        # in-subgraph weight is a sliver of their total.
+        w_tot = np.bincount(np.searchsorted(halo_nodes, hdst),
+                            weights=graph.gcn_edge_weights(
+                                nbr_of_halo.astype(np.int64), hdst, degrees),
+                            minlength=nh)
+        w_in = np.bincount(np.searchsorted(halo_nodes, e2_dst_g),
+                           weights=graph.gcn_edge_weights(
+                               e2_src_g, e2_dst_g, degrees),
+                           minlength=nh)
+        halo_ti = np.clip(w_tot / np.maximum(w_in, 1e-12),
+                          1.0, TI_SCALE_CLIP).astype(np.float32)
     else:
         e2_src_g = e2_dst_g = np.zeros(0, dtype=np.int64)
         halo_local_deg = np.zeros(0, dtype=np.int64)
+        halo_ti = np.zeros(0, dtype=np.float32)
 
     src_g = np.concatenate([e1_src_g, e2_src_g])
     dst_g = np.concatenate([e1_dst_g, e2_dst_g])
@@ -279,8 +311,10 @@ def build_subgraph(
 
     score, alpha = beta_spec
     beta = np.zeros(pad_halo, np.float32)
+    ti_scale = np.zeros(pad_halo, np.float32)
     if nh:
         beta[:nh] = beta_score(halo_local_deg, degrees[halo_nodes], score, alpha)
+        ti_scale[:nh] = halo_ti
 
     n_labeled_total = max(int(graph.train_mask.sum()), 1)
     b_over_c = float(num_parts) / float(max(clusters_in_batch, 1))
@@ -291,7 +325,8 @@ def build_subgraph(
         batch_gids=bg, halo_gids=hg, batch_mask=bm, halo_mask=hm,
         edge_src=es, edge_dst=ed, edge_w=ewp, labels=labels,
         labeled_mask=labeled, beta=beta, loss_scale=loss_scale,
-        grad_scale=grad_scale, n_batch_real=nb, n_halo_real=nh, n_edges_real=ne)
+        grad_scale=grad_scale, ti_scale=ti_scale,
+        n_batch_real=nb, n_halo_real=nh, n_edges_real=ne)
 
 
 def padded_sizes_for(graph: Graph, parts: np.ndarray, num_parts: int, c: int,

@@ -17,12 +17,12 @@ HBM→VMEM double-buffered DMA gather (per-row ``pltpu.make_async_copy`` into a
 2-slot VMEM scratch), which removes any VMEM bound on the gather source —
 full-graph historical stores compile (DESIGN.md §3).
 """
-from repro.kernels.ops import (ELLGraph, build_ell, bucketed_spmm,
-                               default_interpret, default_stream,
-                               ell_aggregate_fn, ell_from_coo, ell_spmm,
-                               fixed_row_capacity, lmc_compensate)
+from repro.kernels.ops import (ELLCapacityError, ELLGraph, build_ell,
+                               bucketed_spmm, default_interpret,
+                               default_stream, ell_aggregate_fn, ell_from_coo,
+                               ell_spmm, fixed_row_capacity, lmc_compensate)
 from repro.kernels import ref
 
-__all__ = ["ELLGraph", "build_ell", "ell_from_coo", "fixed_row_capacity",
-           "bucketed_spmm", "ell_spmm", "lmc_compensate", "ell_aggregate_fn",
-           "default_interpret", "default_stream", "ref"]
+__all__ = ["ELLCapacityError", "ELLGraph", "build_ell", "ell_from_coo",
+           "fixed_row_capacity", "bucketed_spmm", "ell_spmm", "lmc_compensate",
+           "ell_aggregate_fn", "default_interpret", "default_stream", "ref"]

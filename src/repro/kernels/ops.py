@@ -42,6 +42,17 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+class ELLCapacityError(ValueError):
+    """A bucket's real row count exceeds its fixed padded capacity.
+
+    Raised by the host-side builders (``build_ell``/``ell_from_coo``) when
+    ``row_capacity`` is given and a degree bucket would need more rows than
+    the fixed shape allows — the alternative, silent truncation, would drop
+    edges and corrupt aggregations. Catch it to rebuild with larger
+    capacities (or let ``fixed_capacity=True`` derive worst-case ones).
+    """
+
+
 def _pick_block_rows(rows: int) -> int:
     """Largest power-of-two tile height ≤ 256 dividing the padded row count."""
     for b in (256, 128, 64, 32, 16, 8):
@@ -111,7 +122,7 @@ def _ell_buckets(indptr: np.ndarray, indices: np.ndarray, weights: np.ndarray,
         if row_capacity is not None:
             rows_pad = int(row_capacity[b])
             if rows > rows_pad:
-                raise ValueError(
+                raise ELLCapacityError(
                     f"bucket {b} (K={k}): {rows} rows exceed capacity {rows_pad}")
         else:
             rows_pad = max(_round_up(rows, block_rows), block_rows)

@@ -16,7 +16,10 @@ at construction (full-graph use), or populate ``aux.ell`` with the batch's
 ``ELLGraph`` — when present, layers aggregate through the differentiable
 ``kernels.bucketed_spmm`` (its custom VJP runs the transposed-adjacency SpMM,
 so the LMC per-layer ``jax.vjp`` calls stay on the kernel; DESIGN.md §3).
-``make_train_step(..., backend="ell")`` selects the latter.
+``make_train_step(..., backend="ell")`` selects the latter, and
+``backend="ti"`` reuses the identical ELL aggregation path — the backends
+differ only in how core/lmc.py compensates halo rows afterwards (store gather
+vs. message-invariant rescale), which this module never sees.
 
 Supported: GCN (Kipf & Welling 2017), GCNII (Chen et al. 2020), GraphSAGE
 (Hamilton et al. 2017), GIN (Xu et al. 2019) — the families used by the paper

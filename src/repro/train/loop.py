@@ -27,7 +27,10 @@ test_supervisor.py):
 ``backend="ell"`` switches the jit'd step onto the Pallas bucketed-ELL
 SpMM/compensate kernels (compiled on TPU, interpreter fallback on CPU);
 batches are then built with their adjacency re-bucketed host-side
-(`to_device_batch(sg, backend="ell")`).
+(`to_device_batch(sg, backend="ell")`). ``backend="ti"`` keeps the ELL
+aggregation but compensates halo rows with the store-free message-invariance
+estimator (DESIGN.md §11) — pair it with ``method=repro.core.TI`` so the
+(unread) store refresh is skipped too.
 
 ``prefetch``/``recycle`` route batch construction through the async
 ``SubgraphPipeline`` (repro.data.prefetch, DESIGN.md §9): sampling + ELL
@@ -118,7 +121,8 @@ class GNNTrainer:
             straggler_deadline / straggler_policy: per-step deadline as a
                 multiple of the running-median step time; ``"skip-store"``
                 drops a straggler step's store update (Thm 2-safe).
-            backend: aggregation hot path, ``"segment"`` | ``"ell"``.
+            backend: aggregation/compensation hot path, ``"segment"`` |
+                ``"ell"`` | ``"ti"`` (store-free message invariance).
             stream: HBM→VMEM DMA gather knob for the ell kernels
                 (None = autodetect).
             prefetch: queue depth of the async batch pipeline. ``None``
@@ -142,7 +146,7 @@ class GNNTrainer:
         self.failure_injector = failure_injector
         self.straggler_deadline = straggler_deadline
         self.straggler_policy = straggler_policy
-        self.backend = backend  # aggregation hot path: "segment" | "ell"
+        self.backend = backend  # hot path: "segment" | "ell" | "ti"
         self.stream = stream    # HBM→VMEM DMA gather knob (None: autodetect)
         if recycle < 1:
             raise ValueError(f"recycle must be >= 1, got {recycle}")

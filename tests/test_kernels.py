@@ -6,9 +6,9 @@ import numpy as np
 import pytest
 from _prop import given, settings, strategies as st
 
-from repro.kernels import (ELLGraph, build_ell, bucketed_spmm,
-                           default_interpret, ell_aggregate_fn, ell_from_coo,
-                           ell_spmm, lmc_compensate)
+from repro.kernels import (ELLCapacityError, ELLGraph, build_ell,
+                           bucketed_spmm, default_interpret, ell_aggregate_fn,
+                           ell_from_coo, ell_spmm, lmc_compensate)
 from repro.kernels.ops import _build_ell_loop
 from repro.kernels.ref import (degree_bucket_spmm_ref, ell_spmm_ref,
                                lmc_compensate_ref)
@@ -143,6 +143,77 @@ def test_ell_from_coo_fixed_capacity_shapes():
                          r.random(e).astype(np.float32), n)
         shapes.append(jax.tree.map(lambda x: x.shape, g))
     assert shapes[0] == shapes[1]
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=10)
+def test_ell_from_coo_zero_degree_rows(seed):
+    """Rows with no incoming edges emit an (empty) bucket-0 row rather than
+    vanishing: they aggregate to exactly 0 and every other row matches the
+    scatter-add oracle."""
+    r = np.random.default_rng(seed)
+    n, e = 64, 120
+    src = r.integers(0, n, e)
+    dst = r.integers(0, n // 2, e)   # rows [n/2, n) have zero in-degree
+    w = r.random(e).astype(np.float32)
+    g = ell_from_coo(src, dst, w, n)
+    h = r.normal(size=(n, 16)).astype(np.float32)
+    out = np.asarray(bucketed_spmm(g, jnp.asarray(h)))
+    ref_out = np.zeros((n, 16), np.float32)
+    np.add.at(ref_out, dst, w[:, None] * h[src])
+    np.testing.assert_allclose(out, ref_out, rtol=2e-4, atol=1e-5)
+    np.testing.assert_array_equal(out[n // 2:], 0.0)
+
+
+def test_build_ell_exactly_at_capacity():
+    """rows == capacity is legal: no padding rows, no error, exact results."""
+    n = 8                             # 8 deg-[1..8] nodes -> 8 bucket-0 rows
+    r = np.random.default_rng(0)
+    deg = np.arange(1, n + 1)
+    indptr = np.zeros(n + 1, np.int64)
+    indptr[1:] = np.cumsum(deg)
+    indices = r.integers(0, n, int(indptr[-1])).astype(np.int32)
+    weights = r.random(int(indptr[-1])).astype(np.float32)
+    g = build_ell(indptr, indices, weights, row_capacity=(8, 8, 8))
+    assert g.bucket_idx[0].shape[0] == 8          # exactly full, zero pad rows
+    h = r.normal(size=(n, 8)).astype(np.float32)
+    out = np.asarray(bucketed_spmm(g, jnp.asarray(h)))
+    ref_out = np.zeros((n, 8), np.float32)
+    src = np.repeat(np.arange(n), deg)
+    np.add.at(ref_out, src, weights[:, None] * h[indices])
+    np.testing.assert_allclose(out, ref_out, rtol=2e-4, atol=1e-5)
+
+
+def test_build_ell_overflow_raises_named_error():
+    """One row over capacity raises ELLCapacityError (a ValueError, so legacy
+    handlers keep working) instead of silently truncating edges."""
+    n = 9                             # 9 deg-1 nodes -> 9 bucket-0 rows
+    indptr = np.arange(n + 1, dtype=np.int64)
+    indices = np.zeros(n, np.int32)
+    weights = np.ones(n, np.float32)
+    with pytest.raises(ELLCapacityError, match="bucket 0 .*9 rows exceed"):
+        build_ell(indptr, indices, weights, row_capacity=(8, 8, 8))
+    assert issubclass(ELLCapacityError, ValueError)
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=10)
+def test_ell_from_coo_fixed_capacity_never_overflows(seed):
+    """The worst-case capacities of ``fixed_capacity=True`` hold for any COO
+    with the declared (rows, E) envelope — including heavy rows that split
+    into many max-bucket chunks — and the aggregation stays exact."""
+    r = np.random.default_rng(seed)
+    n, e = 48, 600
+    hub = int(r.integers(0, n))
+    dst = np.where(r.random(e) < 0.5, hub, r.integers(0, n, e))  # heavy row
+    src = r.integers(0, n, e)
+    w = r.random(e).astype(np.float32)
+    g = ell_from_coo(src, dst, w, n)   # must not raise ELLCapacityError
+    h = r.normal(size=(n, 8)).astype(np.float32)
+    out = np.asarray(bucketed_spmm(g, jnp.asarray(h)))
+    ref_out = np.zeros((n, 8), np.float32)
+    np.add.at(ref_out, dst, w[:, None] * h[src])
+    np.testing.assert_allclose(out, ref_out, rtol=2e-4, atol=1e-5)
 
 
 # ------------------------------------------------------------- gradient paths
