@@ -1,0 +1,202 @@
+"""Serving-tier benchmark (DESIGN.md §12) -> BENCH_serve.json.
+
+Measures the GNNServer end to end — admission queue, bucket batcher,
+compiled infer traces, degradation policy — the way a client sees it:
+
+* ``qps<q>_clean`` / ``qps<q>_faulty`` — paced open-loop load at three QPS
+  levels, 0% and injected fault rates (slow batch + poisoned store rows).
+  ``us_per_call`` is the p50 client-observed latency; p99 and achieved
+  throughput ride along. ``scripts/check.sh`` gates the clean p99 at
+  <= 1.3x the committed baseline at the fixed middle QPS level.
+* ``parity_ti`` — the degraded store-free rung vs the exact rung on the
+  same trained params: top-1 agreement and the val-accuracy gap. The gap
+  is the quality floor of every degraded answer the robustness ladder
+  serves; check.sh gates it at <= 0.05.
+* ``drain`` — graceful-shutdown accounting: every admitted request must be
+  resolved (``dropped`` gated at 0).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_serve [--fast]`` or
+``python -m benchmarks.run --only serve``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments" / "bench"
+
+CFG = dict(preset="ppi-cpu", hidden=64, layers=3, parts=16, c=2, lr=0.3)
+QPS_LEVELS = (50, 200, 800)
+GATED_QPS = 200          # the level check.sh compares across commits
+
+
+def _trained_setup(steps: int):
+    import jax  # noqa: F401  (device init before timing)
+    from repro.core import LMC
+    from repro.graph import ClusterSampler, make_sbm_dataset, partition_graph
+    from repro.models import make_gnn
+    from repro.optim import sgd
+    from repro.train import GNNTrainer
+    g = make_sbm_dataset(CFG["preset"], seed=3)
+    gnn = make_gnn("gcn", g.feature_dim, CFG["hidden"], g.num_classes,
+                   CFG["layers"])
+    parts = partition_graph(g, CFG["parts"], seed=0)
+    sampler = ClusterSampler(g, CFG["parts"], CFG["c"], parts=parts, seed=1)
+    tr = GNNTrainer(gnn, LMC, g, sampler, sgd(lr=CFG["lr"]), seed=0)
+    tr.run(steps)
+    return g, gnn, tr
+
+
+def _server(g, gnn, tr, plan=None, **cfg_kw):
+    from repro.serve import GNNServer, ServeConfig
+    cfg = ServeConfig(default_deadline_s=10.0, warmup=True, **cfg_kw)
+    return GNNServer(gnn, g, tr.params, config=cfg, fault_plan=plan,
+                     data=tr.data)
+
+
+def _load(srv, g, qps: float, n_requests: int, seed: int,
+          plan=None) -> dict:
+    """Open-loop paced load; returns client-observed latency/throughput."""
+    rng = np.random.default_rng(seed)
+    period = 1.0 / qps
+    futs = []
+    t0 = time.time()
+    for i in range(n_requests):
+        k = int(rng.integers(1, 9))
+        nodes = rng.choice(g.num_nodes, size=k, replace=False)
+        futs.append(srv.submit(nodes, request_id=f"q{i}"))
+        time.sleep(max(0.0, t0 + (i + 1) * period - time.time()))
+    rs = [f.result(timeout=120.0) for f in futs]
+    wall = time.time() - t0
+    lat = np.array([r.latency_s for r in rs if r.ok])
+    from collections import Counter
+    statuses = dict(sorted(Counter(r.status for r in rs).items()))
+    return {
+        "us_per_call": float(np.percentile(lat, 50)) * 1e6,
+        "p99_us": float(np.percentile(lat, 99)) * 1e6,
+        "throughput_rps": len(rs) / wall,
+        "answered": int(lat.size),
+        "statuses": statuses,
+    }
+
+
+def bench_serve(fast: bool = False) -> dict:
+    """p50/p99/throughput across QPS x fault-rate, ti parity, drain audit."""
+    from repro.core.exact import accuracy
+    from repro.train.health import FaultPlan
+
+    train_steps = 60 if fast else 120
+    n_requests = 48 if fast else 96
+    g, gnn, tr = _trained_setup(train_steps)
+    rows = {}
+
+    srv = _server(g, gnn, tr)
+    try:
+        for qps in QPS_LEVELS:
+            row = _load(srv, g, qps, n_requests, seed=qps)
+            if qps == GATED_QPS:
+                row["default_path"] = True   # the cross-PR latency tripwire
+            rows[f"qps{qps}_clean"] = row
+            print(f"serve/qps{qps}_clean,{row['us_per_call']:.0f},"
+                  f"p99_us={row['p99_us']:.0f} "
+                  f"rps={row['throughput_rps']:.1f}", flush=True)
+    finally:
+        srv.close(drain=False)
+
+    # nonzero fault rate: a stalled batch + two poisoned-row strikes per run
+    for qps in QPS_LEVELS:
+        # low batch seqs: high-QPS runs coalesce many requests per batch,
+        # so late seqs would never be reached
+        plan = FaultPlan(serve_slow_at=(2,), serve_slow_s=0.05,
+                         serve_poison_at=(3, 5))
+        srv = _server(g, gnn, tr, plan=plan)
+        try:
+            row = _load(srv, g, qps, n_requests, seed=qps, plan=plan)
+            rows[f"qps{qps}_faulty"] = row
+            print(f"serve/qps{qps}_faulty,{row['us_per_call']:.0f},"
+                  f"p99_us={row['p99_us']:.0f} "
+                  f"statuses={row['statuses']}", flush=True)
+        finally:
+            srv.close(drain=False)
+
+    # degraded-rung parity: ti answers vs exact answers on trained params
+    srv = _server(g, gnn, tr)
+    srv_ti = _server(g, gnn, tr, force_mode="ti", verify_rows=False,
+                     repair=False)
+    try:
+        rng = np.random.default_rng(0)
+        nodes = rng.permutation(g.num_nodes)[:512 if fast else 1024]
+        agree = both = 0
+        ti_pred = np.zeros(g.num_nodes, dtype=np.int64)
+        exact_pred = np.zeros(g.num_nodes, dtype=np.int64)
+        for chunk in np.array_split(nodes, -(-nodes.size // 128)):
+            re_ = srv.infer(chunk)
+            rt = srv_ti.infer(chunk)
+            assert re_.status == "ok" and rt.ok, (re_.status, rt.status)
+            exact_pred[chunk] = re_.classes
+            ti_pred[chunk] = rt.classes
+            agree += int((re_.classes == rt.classes).sum())
+            both += chunk.size
+        val = np.asarray(g.val_mask) & np.isin(np.arange(g.num_nodes), nodes)
+        y = np.asarray(g.y if hasattr(g, "y") else g.labels)
+        acc_exact = float((exact_pred[val] == y[val]).mean())
+        acc_ti = float((ti_pred[val] == y[val]).mean())
+        # full-graph reference keeps the exact rung honest
+        acc_full = float(accuracy(gnn, tr.params, tr.data,
+                                  np.asarray(g.val_mask, np.float32)))
+        rows["parity_ti"] = {
+            "us_per_call": 0.0,
+            "top1_agreement": agree / both,
+            "val_acc_exact": acc_exact,
+            "val_acc_ti": acc_ti,
+            "val_acc_gap": abs(acc_exact - acc_ti),
+            "val_acc_full_forward": acc_full,
+        }
+        print(f"serve/parity_ti,0,agreement={agree / both:.3f} "
+              f"acc_gap={abs(acc_exact - acc_ti):.3f}", flush=True)
+    finally:
+        srv.close(drain=False)
+        srv_ti.close(drain=False)
+
+    # drain audit: every admitted request resolves; zero dropped in flight
+    srv = _server(g, gnn, tr)
+    rng = np.random.default_rng(7)
+    futs = [srv.submit(rng.choice(g.num_nodes, size=4, replace=False))
+            for _ in range(32)]
+    drained = srv.drain(timeout=120.0)
+    rs = [f.result(timeout=1.0) for f in futs]
+    resolved_ok = sum(1 for r in rs if r.ok)
+    dropped = sum(1 for r in rs if not r.ok)
+    rows["drain"] = {"us_per_call": 0.0, "submitted": len(futs),
+                     "resolved_ok": resolved_ok, "dropped": dropped,
+                     "clean_exit": bool(drained)}
+    print(f"serve/drain,0,submitted={len(futs)} ok={resolved_ok} "
+          f"dropped={dropped}", flush=True)
+    return rows
+
+
+def main() -> None:
+    """Standalone entry point mirroring ``benchmarks.run``'s artifact shape."""
+    import jax
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer requests and training steps")
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    rows = bench_serve(fast=args.fast)
+    artifact = {"name": "serve", "backend": jax.default_backend(),
+                "agg_backend": "segment", "rows": rows}
+    path = OUT / "BENCH_serve.json"
+    path.write_text(json.dumps(artifact, indent=2, sort_keys=True))
+    print(f"# wrote {path.relative_to(ROOT)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,9 @@ Paper mapping (DESIGN.md §6):
                                  (DESIGN.md §11): convergence at fixed step
                                  counts + per-step historical-store traffic;
                                  the ti step must stay <= 1.0x the ell step
+  bench_serve                 -> serving tier (DESIGN.md §12): client p50/
+                                 p99 + throughput across QPS x fault-rate,
+                                 degraded-rung parity, drain accounting
 """
 from __future__ import annotations
 
@@ -444,6 +447,7 @@ def bench_compensate(fast=False):
 
 from benchmarks.bench_backends import bench_backends  # noqa: E402
 from benchmarks.bench_pipeline import bench_pipeline  # noqa: E402
+from benchmarks.bench_serve import bench_serve  # noqa: E402
 from benchmarks.bench_supervisor import bench_supervisor  # noqa: E402
 
 BENCHES = {
@@ -459,6 +463,7 @@ BENCHES = {
     "pipeline": bench_pipeline,
     "supervisor": bench_supervisor,
     "backends": bench_backends,
+    "serve": bench_serve,
 }
 
 

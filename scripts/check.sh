@@ -23,8 +23,14 @@
 # sampler stream and gates the store-free ti estimator: step time <= ell
 # (strict on compiled backends, jitter headroom under the CPU interpreter),
 # zero store bytes/step, and terminal-loss parity on full-fidelity runs.
-# scripts/coverage_gate.py enforces a line-coverage floor over
-# repro.core+repro.kernels before the benchmarks run.
+# The serve benchmark (DESIGN.md §12) gates the serving tier: clean p99
+# latency <= 1.3x the committed baseline at the fixed gated QPS level,
+# degraded-rung (ti) val-accuracy within 0.05 of the exact rung, and zero
+# dropped in-flight requests on drain; the serving fault matrix (hung
+# batch / poisoned store rows / queue-overflow burst / worker crash) runs
+# in gate 1b alongside the training matrix.
+# scripts/coverage_gate.py enforces line-coverage floors over
+# repro.core+repro.kernels and repro.serve before the benchmarks run.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -33,7 +39,7 @@ python -m repro.analysis src/
 
 # gate 1b: the fault-injection matrix fails fast — a broken recovery path
 # invalidates every longer-running gate below it
-python -m pytest -q tests/test_supervisor.py -k "matrix"
+python -m pytest -q tests/test_supervisor.py tests/test_serve.py -k "matrix"
 
 # docstring hygiene (ruff D rules scoped in ruff.toml); optional: the pinned
 # container may not ship ruff, and the bespoke `repro.analysis` pass above is
@@ -58,7 +64,8 @@ python scripts/coverage_gate.py
 BASE_DIR=$(mktemp -d)
 trap 'rm -rf "$BASE_DIR"' EXIT
 for f in experiments/bench/BENCH_spmm.json experiments/bench/BENCH_compensate.json \
-         experiments/bench/BENCH_pipeline.json experiments/bench/BENCH_backends.json; do
+         experiments/bench/BENCH_pipeline.json experiments/bench/BENCH_backends.json \
+         experiments/bench/BENCH_serve.json; do
     git show "HEAD:$f" > "$BASE_DIR/$(basename "$f")" 2>/dev/null \
         || rm -f "$BASE_DIR/$(basename "$f")"   # not committed yet: no gate
 done
@@ -68,6 +75,7 @@ python -m benchmarks.run --fast --only compensate
 python -m benchmarks.run --fast --only pipeline
 python -m benchmarks.run --fast --only supervisor
 python -m benchmarks.run --fast --only backends
+python -m benchmarks.run --fast --only serve
 
 BASELINE_DIR="$BASE_DIR" python - <<'EOF'
 import json
@@ -177,4 +185,45 @@ if tv.get("gate"):
         f"backends:ti terminal loss diverges {tv['loss_rel_gap']:.1%} "
         f"from ell at {tv['steps']} steps")
     print(f"check OK: backends:ti_vs_ell loss gap {tv['loss_rel_gap']:.1%}")
+
+# serving tripwires (DESIGN.md §12): p99 regression at the gated QPS level,
+# degraded-rung answer quality, and drain accounting
+SERVE_P99_TOL = 1.3      # same budget as the kernel-path tripwires
+SERVE_PARITY_TOL = 0.05  # ti val-accuracy may trail exact by at most this
+sv = json.load(open("experiments/bench/BENCH_serve.json"))
+srows = sv["rows"]
+gated = [k for k, r in srows.items()
+         if k.endswith("_clean") and r.get("default_path")]
+bpath = base_dir / "BENCH_serve.json"
+if not bpath.exists():
+    print("check: no committed baseline for BENCH_serve.json; "
+          "skipping p99 tripwire")
+else:
+    base = json.load(open(bpath))
+    if base.get("backend") != sv.get("backend"):
+        print(f"check: BENCH_serve.json baseline backend "
+              f"{base.get('backend')!r} != {sv.get('backend')!r}; "
+              f"skipping p99 tripwire")
+    else:
+        for key in gated:
+            old = base["rows"].get(key)
+            if old is None or "p99_us" not in old:
+                continue
+            ratio = srows[key]["p99_us"] / max(old["p99_us"], 1e-9)
+            assert ratio <= SERVE_P99_TOL, (
+                f"serve:{key} p99 regressed {ratio:.2f}x "
+                f"({old['p99_us']:.0f}us -> {srows[key]['p99_us']:.0f}us)")
+            print(f"check OK: serve:{key} p99 {ratio:.2f}x vs baseline")
+par = srows["parity_ti"]
+assert par["val_acc_gap"] <= SERVE_PARITY_TOL, (
+    f"serve:parity_ti degraded rung trails exact by "
+    f"{par['val_acc_gap']:.3f} val accuracy (bound {SERVE_PARITY_TOL})")
+print(f"check OK: serve:parity_ti acc gap {par['val_acc_gap']:.3f} "
+      f"(agreement {par['top1_agreement']:.1%})")
+dr = srows["drain"]
+assert dr["dropped"] == 0 and dr["clean_exit"], (
+    f"serve:drain dropped {dr['dropped']} of {dr['submitted']} in-flight "
+    f"requests (clean_exit={dr['clean_exit']})")
+print(f"check OK: serve:drain {dr['resolved_ok']}/{dr['submitted']} "
+      f"resolved, 0 dropped")
 EOF

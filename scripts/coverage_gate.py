@@ -1,9 +1,13 @@
-"""Line-coverage floor for the numerics core (`scripts/check.sh` gate).
+"""Line-coverage floors for the numerics core + serving tier (`check.sh`).
 
-Measures line coverage of ``src/repro/core`` + ``src/repro/kernels`` under a
-targeted pytest subset (the LMC step/compensation tests, the kernel property
-tests and the ELL-backend equivalence tests — the suites whose whole job is
-exercising those two packages) and fails if it drops below ``FLOOR``.
+Measures line coverage of the load-bearing packages under a targeted pytest
+subset and fails if any group drops below its floor:
+
+* ``core+kernels`` — ``src/repro/core`` + ``src/repro/kernels`` under the
+  LMC step/compensation tests, the kernel property tests and the
+  ELL-backend equivalence tests;
+* ``serve`` — ``src/repro/serve`` under the serving unit + fault-matrix
+  suite (``tests/test_serve.py``).
 
 Prefers coverage.py when importable.  The pinned container does not ship it,
 so the fallback is self-contained stdlib machinery:
@@ -17,7 +21,8 @@ so the fallback is self-contained stdlib machinery:
 
 The tracer is installed *before* pytest is imported so that the one-time
 module-level lines of the target packages (executed at first import, during
-collection) are credited.
+collection) are credited.  ``threading.settrace`` matters for the serving
+group: the server's worker thread executes most of server.py.
 
 Run: ``PYTHONPATH=src python scripts/coverage_gate.py [extra pytest args]``.
 """
@@ -29,14 +34,19 @@ from collections import defaultdict
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
-TARGET_DIRS = (ROOT / "src" / "repro" / "core",
-               ROOT / "src" / "repro" / "kernels")
+SRC = ROOT / "src" / "repro"
+GROUPS = {
+    "core+kernels": {"dirs": (SRC / "core", SRC / "kernels"), "floor": 85.0},
+    "serve": {"dirs": (SRC / "serve",), "floor": 85.0},
+}
 TESTS = ("tests/test_lmc_core.py", "tests/test_kernels.py",
-         "tests/test_ell_backend.py", "tests/test_backend_matrix.py")
-FLOOR = 85.0   # measured 92.x% on the pinned container; margin for drift
+         "tests/test_ell_backend.py", "tests/test_backend_matrix.py",
+         "tests/test_serve.py")
 
-TARGET_FILES = frozenset(
-    str(p) for d in TARGET_DIRS for p in sorted(d.rglob("*.py")))
+GROUP_FILES = {
+    name: frozenset(str(p) for d in g["dirs"] for p in sorted(d.rglob("*.py")))
+    for name, g in GROUPS.items()}
+TARGET_FILES = frozenset().union(*GROUP_FILES.values())
 _executed: dict[str, set[int]] = defaultdict(set)
 
 
@@ -76,11 +86,15 @@ def main(argv: list[str]) -> int:
         coverage = None
 
     if coverage is not None:
-        cov = coverage.Coverage(source=[str(d) for d in TARGET_DIRS])
+        cov = coverage.Coverage(
+            source=[str(d) for g in GROUPS.values() for d in g["dirs"]])
         cov.start()
         rc = _run_pytest(argv)
         cov.stop()
-        pct = cov.report(show_missing=False)
+
+        def file_cov(f):
+            _, statements, _, missing, _ = cov.analysis2(f)
+            return len(statements) - len(missing), len(statements)
     else:
         import threading
         threading.settrace(_call_tracer)
@@ -89,26 +103,31 @@ def main(argv: list[str]) -> int:
         sys.settrace(None)
         threading.settrace(None)
 
-        total = hit = 0
-        for f in sorted(TARGET_FILES):
+        def file_cov(f):
             ex = _executable_lines(f)
-            got = _executed.get(f, set()) & ex
-            total += len(ex)
-            hit += len(got)
-            rel = Path(f).relative_to(ROOT)
-            print(f"coverage: {rel} {len(got)}/{len(ex)} "
-                  f"({100 * len(got) / max(len(ex), 1):.0f}%)")
-        pct = 100.0 * hit / max(total, 1)
+            return len(_executed.get(f, set()) & ex), len(ex)
 
     if rc != 0:
-        print(f"coverage gate: pytest exited {rc}; not checking the floor")
+        print(f"coverage gate: pytest exited {rc}; not checking the floors")
         return rc
-    print(f"coverage gate: repro.core+repro.kernels {pct:.1f}% "
-          f"(floor {FLOOR:.0f}%)")
-    if pct < FLOOR:
-        print(f"coverage gate: FAILED — {pct:.1f}% < {FLOOR:.0f}%")
-        return 1
-    return 0
+
+    failed = False
+    for name, g in GROUPS.items():
+        total = hit = 0
+        for f in sorted(GROUP_FILES[name]):
+            got, ex = file_cov(f)
+            total += ex
+            hit += got
+            rel = Path(f).relative_to(ROOT)
+            print(f"coverage: {rel} {got}/{ex} "
+                  f"({100 * got / max(ex, 1):.0f}%)")
+        pct = 100.0 * hit / max(total, 1)
+        floor = g["floor"]
+        print(f"coverage gate: {name} {pct:.1f}% (floor {floor:.0f}%)")
+        if pct < floor:
+            print(f"coverage gate: FAILED — {name} {pct:.1f}% < {floor:.0f}%")
+            failed = True
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

@@ -20,6 +20,9 @@ rules (DESIGN.md §8):
                         jitted / custom-VJP / kernel bodies
   R005 custom-vjp-arity fwd residual tuple vs bwd unpack arity, fwd/bwd
                         parameter counts vs nondiff_argnums, bwd return arity
+  R006 unbounded-queue  unbounded queue.Queue construction and blocking
+                        get/put/join without timeout= in the threaded tiers
+                        (src/repro/{data,serve} only)
 
 Known-good exceptions are annotated in source with
 ``# lint: ok(R00x[,R00y]) <reason>`` pragmas — the reason is mandatory; a

@@ -133,9 +133,10 @@ def all_rules() -> list[Rule]:
     from repro.analysis.rules_concat import ShardedConcatRule
     from repro.analysis.rules_jit import JitHazardRule
     from repro.analysis.rules_pallas import DmaPairingRule, VmemBudgetRule
+    from repro.analysis.rules_queue import UnboundedQueueRule
     from repro.analysis.rules_vjp import CustomVjpArityRule
     return [ShardedConcatRule(), DmaPairingRule(), VmemBudgetRule(),
-            JitHazardRule(), CustomVjpArityRule()]
+            JitHazardRule(), CustomVjpArityRule(), UnboundedQueueRule()]
 
 
 def _iter_py_files(paths: Sequence[Union[str, Path]]) -> Iterator[Path]:

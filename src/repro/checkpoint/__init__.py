@@ -1,4 +1,4 @@
 from repro.checkpoint.manager import (CheckpointError, CheckpointManager,
-                                      reshard)
+                                      crc32_array, reshard)
 
-__all__ = ["CheckpointError", "CheckpointManager", "reshard"]
+__all__ = ["CheckpointError", "CheckpointManager", "crc32_array", "reshard"]

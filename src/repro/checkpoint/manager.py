@@ -50,8 +50,18 @@ class CheckpointError(RuntimeError):
     """A checkpoint is missing, structurally wrong, or fails verification."""
 
 
-def _crc(arr: np.ndarray) -> int:
+def crc32_array(arr: np.ndarray) -> int:
+    """crc32 of an array's contiguous bytes — the manifest integrity idiom.
+
+    Public so other tiers can reuse the exact same checksum definition; the
+    serving store's per-row integrity ledger (serve/policy.py StoreIntegrity)
+    records/verifies rows with this, keeping "corrupt" mean the same thing
+    for a checkpoint leaf and a cached embedding row.
+    """
     return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+_crc = crc32_array
 
 
 class CheckpointManager:

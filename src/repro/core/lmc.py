@@ -157,6 +157,92 @@ def _compensate(mode: str, backend: str, store_l: Optional[jax.Array],
     return _combine(mode, beta1d[:, None], hist, fresh, mask1d[:, None])
 
 
+def make_infer_step(gnn: GNN, num_nodes: int, *, backend: str = "segment",
+                    fwd_mode: str = "historical", compensation: str = "store",
+                    refresh: bool = True,
+                    stream: Optional[bool] = None) -> Callable:
+    """Build ``infer(params, store, batch, x_full, self_w_full)`` — the
+    forward-only serving entry point over the historical store.
+
+    Returns ``(logits, new_store)`` where ``logits`` covers the batch's
+    padded target rows (mask with ``batch.batch_mask``). Pure; jit at call
+    site, one trace per padded batch shape.
+
+    The forward loop is the train step's (Eqs. 8-10) with the backward pass
+    cut away: batch rows aggregate their *complete* neighborhood (every
+    neighbor is in the padded extension), halo rows are approximated by
+    ``_compensate``. Two axes:
+
+    ``compensation="store"`` (the healthy serving path) gathers halo rows
+    from ``store.h`` — with ``fwd_mode="historical"`` and a store holding
+    exact layer values (core/exact.py ``exact_layer_values``), the target
+    logits equal the full-graph forward exactly, at mini-batch cost: the
+    store IS the receptive field. ``compensation="ti"`` substitutes the
+    message-invariance transform α ⊙ fresh for every store read (DESIGN.md
+    §11) — the store-free degraded mode with Fig.-3-bounded bias, also the
+    repair path (recompute rows without trusting the store).
+
+    ``refresh=True`` scatters the freshly computed batch rows back into the
+    store (the read path through ``lmc_compensate`` under ``backend="ell"``);
+    on the exact path this keeps refreshed rows exact, and under
+    ``compensation="ti"`` it *heals* poisoned/stale rows from store-free
+    values. ``refresh=False`` is the strictly read-only mode — with
+    ``compensation="ti"`` the store is provably dead in the jaxpr.
+
+    ``backend`` selects aggregation only ("segment" | "ell" Pallas SpMM);
+    degradation swaps the compensation, never the aggregation kernel, so
+    both modes share the compiled trace shape.
+    """
+    assert backend in ("segment", "ell"), backend
+    assert compensation in ("store", "ti"), compensation
+    assert fwd_mode in ("lmc", "historical", "fresh"), fwd_mode
+    L = gnn.num_layers
+
+    def infer(params: dict, store: HistoricalState, batch: Batch,
+              x_full: jax.Array, self_w_full: jax.Array):
+        nb = batch.batch_gids.shape[0]
+        if backend == "ell" and batch.ell is None:
+            raise ValueError(
+                'backend="ell" needs batch.ell; build the batch with '
+                'to_device_batch(sg, backend="ell")')
+        if compensation == "ti" and batch.ti_scale is None:
+            raise ValueError(
+                'compensation="ti" needs batch.ti_scale; attach the '
+                "subgraph's α scales (host_batch(sg, backend=\"ti\") or "
+                "Batch._replace)")
+        ext_gids = concat_rows([batch.batch_gids, batch.halo_gids])
+        x_ext = jnp.take(x_full, ext_gids, axis=0, mode="clip")
+        self_w_ext = jnp.take(self_w_full, ext_gids, axis=0, mode="clip")
+        edges = EdgeList(batch.edge_src, batch.edge_dst, batch.edge_w)
+        h0_ext = gnn.embed_apply(params["embed"], x_ext)
+        aux = LayerAux(edges=edges, x=x_ext, h0=h0_ext, self_w=self_w_ext,
+                       ell=batch.ell if backend == "ell" else None,
+                       stream=stream)
+        bmask = batch.batch_mask[:, None]
+        comp_backend = "ti" if compensation == "ti" else backend
+
+        h_in = h0_ext
+        new_h = store.h
+        for l in range(L):
+            h_out = gnn.layer_apply(gnn.layer_params(params, l), l, h_in, aux)
+            h_bar_batch = h_out[:nb] * bmask
+            h_hat_halo = _compensate(
+                fwd_mode, comp_backend,
+                None if compensation == "ti" else new_h[l],
+                batch.halo_gids, batch.beta, h_out[nb:], batch.halo_mask,
+                stream, batch.ti_scale)
+            if refresh:
+                new_h = new_h.at[l].set(scatter_rows(
+                    new_h[l], batch.batch_gids, batch.batch_mask, h_bar_batch,
+                    num_nodes))
+            h_in = concat_rows([h_bar_batch, h_hat_halo], axis=0)
+
+        logits = gnn.head_apply(params["head"], h_in[:nb])
+        return logits, HistoricalState(h=new_h, v=store.v)
+
+    return infer
+
+
 def make_train_step(gnn: GNN, method: MBMethod, num_nodes: int, *,
                     backend: str = "segment",
                     stream: Optional[bool] = None) -> Callable:

@@ -29,6 +29,16 @@ from __future__ import annotations
 
 import dataclasses
 
+# Thm 2's convergence bound tolerates a bias term geometric in the staleness ρ
+# of every historical row read by a step. This is the one shared ρ-budget
+# definition: the training tier (train/health.py HealthConfig.rho_budget) and
+# the serving tier (serve/policy.py DegradationPolicy) must both read it so
+# the two enforcement points cannot drift apart. Measured on the quickstart
+# presets the realized ρ of cluster sampling stays well under this; rows past
+# the budget are treated as unreliable (training: health event / strict error;
+# serving: degrade the request to the store-free ti path).
+RHO_BUDGET_DEFAULT = 64
+
 
 @dataclasses.dataclass(frozen=True)
 class MBMethod:

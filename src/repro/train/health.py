@@ -45,6 +45,19 @@ from typing import Optional
 
 import numpy as np
 
+# One shared ρ-budget definition (core/methods.py, next to MBMethod) so the
+# training tier's enforcement here and the serving tier's degradation policy
+# (serve/policy.py) cannot drift apart. Re-exported for callers that
+# configure HealthConfig.rho_budget.
+from repro.core.methods import RHO_BUDGET_DEFAULT
+
+__all__ = [
+    "RHO_BUDGET_DEFAULT", "SimulatedPreemption", "PipelineFault",
+    "CheckpointWriteFault", "TrainingDivergedError", "StalenessBudgetError",
+    "ServeWorkerFault", "FaultPlan", "FailureInjector", "HealthConfig",
+    "HealthGuard",
+]
+
 
 # ----------------------------------------------------------------- fault types
 class SimulatedPreemption(RuntimeError):
@@ -67,6 +80,10 @@ class StalenessBudgetError(RuntimeError):
     """Strict ρ-budget enforcement: halo staleness exceeded ``rho_budget``."""
 
 
+class ServeWorkerFault(RuntimeError):
+    """Injected serving-worker crash (fires inside a batch execution)."""
+
+
 # ------------------------------------------------------------------ FaultPlan
 class FaultPlan:
     """Deterministic, one-shot schedule of injected faults (tests/drills).
@@ -79,8 +96,13 @@ class FaultPlan:
     """
 
     def __init__(self, *, preempt_at: tuple = (), pipeline_at: tuple = (),
-                 ckpt_write_at: tuple = (), nan_batch_at: tuple = ()):
-        """Schedule faults by global step index (``pipeline_at``: by slot).
+                 ckpt_write_at: tuple = (), nan_batch_at: tuple = (),
+                 serve_slow_at: tuple = (), serve_poison_at: tuple = (),
+                 serve_crash_at: tuple = (), serve_burst_at: tuple = (),
+                 serve_slow_s: float = 0.25, serve_burst_n: int = 32):
+        """Schedule faults by global step index (``pipeline_at``: by slot;
+        ``serve_*_at``: by the server's batch sequence number, except
+        ``serve_burst_at`` which is keyed by the driver's request index).
 
         Args:
             preempt_at: steps at which a SimulatedPreemption is raised.
@@ -88,9 +110,31 @@ class FaultPlan:
                 PipelineFault (slot == step when ``recycle == 1``).
             ckpt_write_at: steps whose checkpoint save fails mid-write.
             nan_batch_at: steps whose batch is poisoned with NaN weights.
+            serve_slow_at: serving batches stalled for ``serve_slow_s``
+                before execution (hung-batch drill; recovery = per-request
+                deadlines turn the stall into typed timeout responses).
+            serve_poison_at: serving batches whose historical-store halo
+                rows are NaN-poisoned right before the batch reads them
+                (recovery = crc/NaN detection degrades to the ti path and
+                repairs the rows).
+            serve_crash_at: serving batches whose execution raises
+                :class:`ServeWorkerFault` (recovery = bounded in-place
+                retry, the serving analogue of a worker respawn).
+            serve_burst_at: request indices at which the *driver* should
+                inject a burst of ``serve_burst_n`` extra requests
+                (queue-overflow drill; recovery = typed Overloaded
+                load-shedding, never unbounded blocking).
+            serve_slow_s: stall duration for ``serve_slow_at`` batches.
+            serve_burst_n: burst size for ``serve_burst_at`` indices.
         """
         self._at = {"preempt": set(preempt_at), "pipeline": set(pipeline_at),
-                    "ckpt": set(ckpt_write_at), "nan": set(nan_batch_at)}
+                    "ckpt": set(ckpt_write_at), "nan": set(nan_batch_at),
+                    "serve-slow": set(serve_slow_at),
+                    "serve-poison": set(serve_poison_at),
+                    "serve-crash": set(serve_crash_at),
+                    "serve-burst": set(serve_burst_at)}
+        self.serve_slow_s = float(serve_slow_s)
+        self.serve_burst_n = int(serve_burst_n)
         self.fired: set = set()
         self._lock = threading.Lock()
 
@@ -133,6 +177,39 @@ class FaultPlan:
             return batch._replace(edge_w=batch.edge_w * float("nan"))
         return batch
 
+    # ------------------------------------------------- serving fault classes
+    def serve_delay(self, seq: int) -> float:
+        """Stall duration (s) for serving batch ``seq`` (0.0 = no fault).
+
+        The server sleeps this long before executing the batch — the
+        slow/hung-batch drill. Per-request deadlines must convert the stall
+        into typed timeout responses, never a hang.
+        """
+        return self.serve_slow_s if self._fire("serve-slow", seq) else 0.0
+
+    def serve_poison(self, seq: int) -> bool:
+        """Whether serving batch ``seq``'s store halo rows get NaN-poisoned.
+
+        The server owns the store, so it applies the poison itself (the plan
+        only schedules it); crc verification or the NaN circuit breaker must
+        then degrade the batch to the store-free ti path and repair the rows.
+        """
+        return self._fire("serve-poison", seq)
+
+    def serve_crash_hook(self, seq: int) -> None:
+        """Raise :class:`ServeWorkerFault` inside serving batch ``seq``'s
+        execution (worker-crash drill; recovery = bounded in-place retry)."""
+        if self._fire("serve-crash", seq):
+            raise ServeWorkerFault(
+                f"injected serving-worker crash at batch {seq}")
+
+    def serve_burst(self, request_idx: int) -> int:
+        """Extra requests the driver should inject at ``request_idx``
+        (queue-overflow drill), or 0. The admission queue must shed the
+        overflow with typed Overloaded responses."""
+        return self.serve_burst_n if self._fire("serve-burst", request_idx) \
+            else 0
+
 
 class FailureInjector(FaultPlan):
     """Back-compat shim: the original preemption-only injector."""
@@ -167,7 +244,9 @@ class HealthConfig:
         rho_budget: max tolerated staleness (in steps) of any historical
             row *read* this step (the batch's halo rows — exactly the rows
             whose staleness drives Thm 2's bias term). ``None`` records
-            the counters without enforcing a bound.
+            the counters without enforcing a bound; the standard budget is
+            :data:`repro.core.methods.RHO_BUDGET_DEFAULT`, the one shared
+            definition the serving tier's degradation policy also reads.
         rho_strict: raise :class:`StalenessBudgetError` on a budget
             violation instead of recording a history event.
     """

@@ -435,6 +435,84 @@ def test_r005_fwd_signature_and_return():
     assert "must return `(out, residuals)`" in f.message
 
 
+# ---------------------------------------------------------------- R006
+QUEUE_PATH = "src/repro/serve/fixture.py"      # in the rule's scoped dirs
+
+QUEUE_UNBOUNDED = """
+    import queue
+    q = queue.Queue()
+    lq = queue.LifoQueue(maxsize=0)
+    sq = queue.SimpleQueue()
+"""
+
+QUEUE_BOUNDED = """
+    import queue
+    q = queue.Queue(maxsize=8)
+    p = queue.PriorityQueue(16)
+"""
+
+QUEUE_BLOCKING = """
+    def f(q, t):
+        item = q.get()
+        q.put(item)
+        t.join()
+"""
+
+QUEUE_NONBLOCKING = """
+    def f(q, t, xs, d):
+        a = q.get(timeout=0.1)
+        b = q.get(block=False)
+        c = q.get_nowait()
+        q.put(a, timeout=1.0)
+        q.put_nowait(b)
+        t.join(timeout=2.0)
+        s = ",".join(xs)          # str.join takes an arg: not the queue shape
+        v = d.get("k", 0)         # dict.get with default: not the queue shape
+        return a, b, c, s, v
+"""
+
+QUEUE_PRAGMA = """
+    import queue
+    # lint: ok(R006) request ordering needs FIFO of unbounded test fixtures
+    q = queue.Queue()
+"""
+
+
+def test_r006_flags_unbounded_queues():
+    fs = live(QUEUE_UNBOUNDED, "R006", path=QUEUE_PATH)
+    assert len(fs) == 3
+    assert any("SimpleQueue" in f.message for f in fs)
+    assert all("maxsize" in f.message for f in fs[:2])
+
+
+def test_r006_silent_on_bounded_queues():
+    assert live(QUEUE_BOUNDED, "R006", path=QUEUE_PATH) == []
+
+
+def test_r006_flags_blocking_calls():
+    fs = live(QUEUE_BLOCKING, "R006", path=QUEUE_PATH)
+    assert sorted(f.message.split("`")[1] for f in fs) == \
+        [".get()", ".join()", ".put()"]
+    assert all("timeout=" in f.message for f in fs)
+
+
+def test_r006_silent_on_timeout_nowait_and_lookalikes():
+    assert live(QUEUE_NONBLOCKING, "R006", path=QUEUE_PATH) == []
+
+
+def test_r006_scoped_to_threaded_tiers():
+    """The same source outside src/repro/{data,serve} is not this rule's
+    business — kernels and training code get to block."""
+    assert live(QUEUE_UNBOUNDED, "R006", path="src/repro/train/loop.py") == []
+    assert live(QUEUE_BLOCKING, "R006", path="benchmarks/bench_serve.py") == []
+
+
+def test_r006_pragma_suppresses_with_reason():
+    assert live(QUEUE_PRAGMA, "R006", path=QUEUE_PATH) == []
+    (f,) = [f for f in findings(QUEUE_PRAGMA, "R006", path=QUEUE_PATH)]
+    assert f.suppressed and "FIFO" in f.reason
+
+
 # ------------------------------------------------------- pragmas & engine
 def test_reasonless_pragma_does_not_suppress():
     src = CONCAT_PRAGMA.replace(
@@ -474,7 +552,8 @@ def test_syntax_error_is_a_finding():
 def test_rule_catalog_ids_unique_and_documented():
     rules = all_rules()
     ids = [r.id for r in rules]
-    assert ids == sorted(set(ids)) == ["R001", "R002", "R003", "R004", "R005"]
+    assert ids == sorted(set(ids)) == ["R001", "R002", "R003", "R004",
+                                       "R005", "R006"]
     assert all(r.name and r.doc for r in rules)
 
 
@@ -529,7 +608,7 @@ def test_cli_rule_filter_and_json(tmp_path):
 
 def test_summary_has_per_rule_lines():
     out = summarize(run_analysis([SRC]))
-    for rid in ("R001", "R002", "R003", "R004", "R005"):
+    for rid in ("R001", "R002", "R003", "R004", "R005", "R006"):
         assert rid in out
     assert "0 unsuppressed" in out
 

@@ -1,0 +1,55 @@
+"""Smoke tests for the runnable examples.
+
+Each example is a user's first contact with the repo, so each gets a
+subprocess run at the smallest sensible scale: exit 0 and the headline
+output lines present. These are end-to-end (fresh interpreter, real argv
+parsing, real device work) — exactly the failure surface unit tests miss
+when an example drifts out of sync with the library API.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run(script, *args, timeout=300):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, str(REPO / "examples" / script), *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert res.returncode == 0, \
+        f"{script} exited {res.returncode}:\n{res.stdout}\n{res.stderr}"
+    return res.stdout
+
+
+def test_quickstart_smoke():
+    out = _run("quickstart.py", "--preset", "ppi-cpu", "--steps", "50")
+    assert "=== cluster ===" in out
+    assert "final test acc:" in out
+
+
+def test_serve_decode_smoke():
+    out = _run("serve_decode.py", "--arch", "zamba2-1.2b", "--batch", "2",
+               "--prompt-len", "8", "--tokens", "4")
+    assert "prefill 2x8" in out
+    assert "decoded 4 tokens/seq" in out
+
+
+def test_serve_gnn_smoke():
+    out = _run("serve_gnn.py", "--requests", "8", "--qps", "50",
+               "--train-steps", "20")
+    assert "server up:" in out
+    assert "'ok': 8" in out
+    assert "drain clean: True" in out
+
+
+def test_serve_gnn_fault_smoke():
+    out = _run("serve_gnn.py", "--fault", "--requests", "24", "--qps", "80",
+               "--train-steps", "20")
+    assert "server events:" in out
+    assert "drain clean: True" in out
+    assert "pending after drain: 0" in out
